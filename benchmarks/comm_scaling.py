@@ -1,0 +1,85 @@
+"""The scalability/communication claim (paper §I, §III.B).
+
+Per-round communication for N clients, model with P params (4-byte):
+
+  blockchain swarm learning — every client broadcasts its full model to
+      every other client: N*(N-1)*P*4 bytes (+ mining work, not modelled)
+  FedAvg                    — 2*N*P*4 (up + down via server)
+  BSO-SL                    — coordinator traffic N*(2*T)*4 (T = tensor
+      count, the distribution summaries) + intra-cluster exchange
+      ~ 2*N*P*4 client-to-client, but NO server and NO O(N^2) broadcast.
+
+The benchmark measures the *actual* byte counts from the implementation
+(diststats.upload_bytes / full_params_bytes) across the assigned archs,
+plus the measured wall-time of the coordinator stage (stats + k-means +
+brain storm) to show it stays negligible as N grows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.configs import get_config
+from repro.core.bso import brain_storm
+from repro.core.diststats import full_params_bytes, param_distribution, upload_bytes
+from repro.core.kmeans import kmeans
+from repro.models import build_model
+
+
+def model_comm_table():
+    import dataclasses
+    for arch in ["squeezenet-dr", "granite-3-2b", "deepseek-7b",
+                 "command-r-35b", "kimi-k2-1t-a32b"]:
+        cfg = get_config(arch)
+        if cfg.family != "cnn":
+            # per-layer tensor counts (not scan-stacked) for honest
+            # coordinator-message sizing
+            cfg = dataclasses.replace(cfg, scan_layers=False)
+        model = build_model(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        up = upload_bytes(params)
+        full = full_params_bytes(params)
+        n = 14
+        bc = (n - 1) * n * full              # blockchain all-broadcast
+        fa = 2 * n * full                    # fedavg
+        bso_coord = n * up                   # BSO-SL coordinator traffic
+        bso_p2p = 2 * n * full               # intra-cluster exchange bound
+        row(f"comm/{arch}", 0.0,
+            f"stats_up_B={up};full_params_B={full};"
+            f"blockchain_B={bc:.3e};fedavg_B={fa:.3e};"
+            f"bso_coord_B={bso_coord:.3e};bso_p2p_B={bso_p2p:.3e};"
+            f"coord_reduction_x={full/max(up,1):.0f}")
+
+
+def coordinator_scaling():
+    """Coordinator wall-time vs N on a SqueezeNet-sized feature vector."""
+    cfg = get_config("squeezenet-dr")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    feats1 = param_distribution(params)
+    F = feats1.shape[0]
+    rng = np.random.default_rng(0)
+    for n in (14, 64, 256, 1024):
+        X = jnp.asarray(rng.normal(size=(n, F)), jnp.float32)
+        km = jax.jit(lambda key, X: kmeans(key, X, 3, 20))
+        _, us = timed(km, jax.random.PRNGKey(0), X, warmup=1, iters=3)
+        t0 = time.perf_counter()
+        a = np.asarray(km(jax.random.PRNGKey(0), X)[1])
+        brain_storm(np.random.default_rng(0), a,
+                    rng.uniform(size=n).astype(np.float32), 3, 0.9, 0.8)
+        bs_us = (time.perf_counter() - t0) * 1e6
+        row(f"comm/coordinator_n{n}", us,
+            f"kmeans_us={us:.0f};brainstorm_us={bs_us:.0f};features={F}")
+
+
+def main():
+    model_comm_table()
+    coordinator_scaling()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    """Returns (result, us_per_call)."""
+    res = None
+    for _ in range(warmup):
+        res = fn(*args)
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        res = fn(*args)
+    jax.block_until_ready(res)
+    dt = (time.perf_counter() - t0) / iters
+    return res, dt * 1e6
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

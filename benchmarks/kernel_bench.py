@@ -1,0 +1,57 @@
+"""Kernel-layer microbenchmarks.
+
+On this CPU container, Pallas kernels execute in interpret mode —
+wall-times are NOT TPU-representative; what is representative (and
+recorded) is the oracle-path timing and each kernel's arithmetic
+intensity, which feed the §Roofline discussion. interpret-mode timings
+are emitted with an explicit 'interpret=1' tag so nobody mistakes them
+for device numbers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.kernels import ops, ref
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    B, H, KV, S, D = 1, 8, 2, 1024, 64
+    q = jax.random.normal(key, (B, H, S, D))
+    k = jax.random.normal(key, (B, KV, S, D))
+    v = jax.random.normal(key, (B, KV, S, D))
+
+    fa_ref = jax.jit(lambda q, k, v: ref.ref_attention(q, k, v, causal=True))
+    _, us = timed(fa_ref, q, k, v)
+    flops = 4 * B * H * S * S * D / 2
+    row("kernel/attention_ref_jit", us,
+        f"S={S};flops={flops:.3e};interpret=0")
+
+    qd = jax.random.normal(key, (B, H, 1, D))
+    kc = jax.random.normal(key, (B, KV, 8192, D))
+    vc = jax.random.normal(key, (B, KV, 8192, D))
+    fd_ref = jax.jit(lambda q, k, v: ref.ref_decode_attention(q, k, v, 8000))
+    _, us = timed(fd_ref, qd, kc, vc)
+    bytes_ = 2 * B * KV * 8192 * D * 4
+    row("kernel/decode_ref_jit", us,
+        f"cache=8192;bytes={bytes_:.3e};ai={2*D/ (2*4):.1f}flop_per_B;interpret=0")
+
+    x = jax.random.normal(key, (1 << 20,))
+    ps_ref = jax.jit(lambda x: ref.ref_param_stats(x))
+    _, us = timed(ps_ref, x)
+    row("kernel/param_stats_ref_jit", us,
+        f"elems={x.size};bytes={x.size*4:.3e};interpret=0")
+
+    # interpret-mode (correctness-path) timings for completeness
+    _, us = timed(lambda: ops.param_stats(x), warmup=1, iters=2)
+    row("kernel/param_stats_pallas_interp", us, "interpret=1")
+    Xs = jax.random.normal(key, (256, 64))
+    Cs = jax.random.normal(key, (3, 64))
+    _, us = timed(lambda: ops.kmeans_assign(Xs, Cs), warmup=1, iters=2)
+    row("kernel/kmeans_assign_pallas_interp", us, "interpret=1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads benchmarks/artifacts/dryrun_*.json (produced by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) roofline
+terms, dominant bottleneck, and useful-flops ratio. Also emits the
+markdown table pasted into EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def load_all():
+    recs = []
+    for p in sorted(ARTIFACTS.glob("dryrun_*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def main(markdown: bool = False):
+    recs = load_all()
+    if not recs:
+        row("roofline/no_artifacts", 0.0,
+            "run `python -m repro.launch.dryrun` first")
+        return
+    lines = ["| arch | shape | mesh | peak GiB/dev | Tc (s) | Tm (s) | "
+             "Tcoll (s) | dominant | useful |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        peak = r["memory"]["peak_per_device"] / 2 ** 30
+        step_s = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        row(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", step_s * 1e6,
+            f"Tc={rf['t_compute_s']:.3e};Tm={rf['t_memory_s']:.3e};"
+            f"Tcoll={rf['t_collective_s']:.3e};dom={rf['dominant']};"
+            f"useful={rf['useful_flops_ratio']:.3f};peakGiB={peak:.2f}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {peak:.2f} | "
+            f"{rf['t_compute_s']:.3e} | {rf['t_memory_s']:.3e} | "
+            f"{rf['t_collective_s']:.3e} | {rf['dominant']} | "
+            f"{rf['useful_flops_ratio']:.2f} |")
+    if markdown:
+        print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    import sys
+    main(markdown="--markdown" in sys.argv)

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point — one module per paper table/claim.
+
+  table2_methods   — paper Table II  (4 methods on the DR task)
+  table3_archs     — paper Table III (model-agnostic CNN sweep)
+  comm_scaling     — §I/§III.B scalability & communication claim
+  cluster_ablation — beyond-paper k / p1 / p2 ablation
+  kernel_bench     — kernel-layer microbenchmarks
+  roofline_report  — §Roofline table from the dry-run artifacts
+
+Each row prints ``name,us_per_call,derived`` CSV.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only name] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller data scale for quick runs")
+    args = ap.parse_args()
+
+    from benchmarks import (cluster_ablation, comm_scaling, kernel_bench,
+                            roofline_report, table2_methods, table3_archs)
+
+    suites = {
+        "comm_scaling": comm_scaling.main,
+        "kernel_bench": kernel_bench.main,
+        "roofline_report": roofline_report.main,
+        "table2_methods": table2_methods.main,
+        "table3_archs": table3_archs.main,
+        "cluster_ablation": cluster_ablation.run,
+    }
+    if args.fast:
+        suites["table2_methods"] = lambda: table2_methods.run(
+            data_scale=16, rounds=2, local_steps=4)
+        suites["table3_archs"] = lambda: table3_archs.run(
+            data_scale=16, rounds=2, local_steps=4)
+        suites["cluster_ablation"] = lambda: cluster_ablation.run(
+            data_scale=16, rounds=2, local_steps=4)
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"suite/{name},{(time.time()-t0)*1e6:.0f},status=ok")
+        except Exception as e:  # noqa: BLE001
+            print(f"suite/{name},{(time.time()-t0)*1e6:.0f},status=FAIL:{e!r}")
+            raise
+
+
+if __name__ == '__main__':
+    main()

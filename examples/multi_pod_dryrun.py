@@ -1,0 +1,32 @@
+"""Example: lower + compile one (arch x shape) on the production meshes
+and print its roofline terms. This is the per-combination unit of the
+full dry-run matrix (`python -m repro.launch.dryrun --arch all ...`).
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py \
+        --arch granite-3-2b --shape decode_32k --mesh both
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: repro.launch.dryrun sets XLA_FLAGS for 512 host devices on import,
+# before jax initialises.
+from repro.launch import dryrun
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for mp in meshes:
+        rec = dryrun.lower_one(args.arch, args.shape, mp)
+        dryrun.save(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Reproduce the paper's Table II and Table III (reduced CPU scale).
+
+    PYTHONPATH=src python examples/paper_tables.py [--full]
+
+--full uses the complete Table-I sample counts (3,657 images) — slower
+but the faithful data scale.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import table2_methods, table3_archs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    scale = 1 if args.full else 8
+    rounds = 8 if args.full else 4
+
+    print("=== Table II: method comparison ===")
+    print("name,us_per_call,derived")
+    r2 = table2_methods.run(data_scale=scale, rounds=rounds)
+    print("\npaper:      centralized 0.4118 | local 0.1924 | "
+          "fedavg 0.3719 | bso-sl 0.3725")
+    print("reproduced: " + " | ".join(f"{k} {v:.4f}" for k, v in r2.items()))
+
+    print("\n=== Table III: model-agnostic sweep ===")
+    print("name,us_per_call,derived")
+    r3 = table3_archs.run(data_scale=scale, rounds=rounds)
+    print("\npaper:      alexnet 0.3703 | vgg 0.4016 | "
+          "inception 0.4216 | squeezenet 0.3725")
+    print("reproduced: " + " | ".join(f"{k} {v:.4f}" for k, v in r3.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Batched serving demo: prefill + autoregressive decode with the
+KV/SSM cache for any assigned architecture (reduced variant on CPU).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mamba2-370m
+    PYTHONPATH=src python examples/serve_batched.py --arch granite-3-2b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--batch", str(args.batch),
+                "--tokens", str(args.tokens)]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

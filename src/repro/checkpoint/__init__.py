@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import restore_into, save_checkpoint  # noqa: F401

@@ -1,0 +1,57 @@
+"""npz + JSON-manifest checkpointing (orbax is not available offline).
+
+Leaves are stored under their tree paths; restore is into an example
+tree (so lists/dicts round-trip without pickling treedefs). Works for
+single models and client-stacked swarm pytrees alike.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.utils.tree import tree_paths_and_leaves
+
+
+def save_checkpoint(path, tree, *, step: int = 0, extra: dict = None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    pairs = tree_paths_and_leaves(tree)
+    arrays = {p: np.asarray(l) for p, l in pairs}
+    np.savez(path.with_suffix(".npz"), **arrays)
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": {p: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for p, a in arrays.items()},
+    }
+    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+
+
+def restore_into(example_tree, path):
+    """Returns (tree, step). ``example_tree`` supplies the structure."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    manifest = json.loads(path.with_suffix(".json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(example_tree)
+    leaves = []
+    for kpath, leaf in flat:
+        key = "/".join(_k(k) for k in kpath)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for '{key}': "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+
+
+def _k(k):
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    return str(k)

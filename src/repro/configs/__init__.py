@@ -1,0 +1,41 @@
+"""Arch registry. Importing this package registers every assigned
+architecture plus the paper's own CNN families."""
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    REGISTRY,
+    ModelConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    SwarmConfig,
+    get_config,
+    register,
+)
+
+# assigned architectures ----------------------------------------------------
+from repro.configs import (  # noqa: F401
+    granite_3_2b,
+    command_r_35b,
+    zamba2_1p2b,
+    deepseek_67b,
+    kimi_k2_1t_a32b,
+    whisper_base,
+    llama4_maverick_400b_a17b,
+    mamba2_370m,
+    internvl2_26b,
+    deepseek_7b,
+    paper_cnns,
+)
+
+ASSIGNED_ARCHS = [
+    "granite-3-2b",
+    "command-r-35b",
+    "zamba2-1.2b",
+    "deepseek-67b",
+    "kimi-k2-1t-a32b",
+    "whisper-base",
+    "llama4-maverick-400b-a17b",
+    "mamba2-370m",
+    "internvl2-26b",
+    "deepseek-7b",
+]

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: the BSO-SL protocol.
+
+local training -> distribution upload -> k-means clustering ->
+brain-storm aggregation (center select / replace / swap + Eq.2 FedAvg).
+"""
+from repro.core.aggregation import cluster_fedavg, cluster_psum_fedavg, fedavg  # noqa: F401
+from repro.core.bso import BSAPlan, brain_storm  # noqa: F401
+from repro.core.diststats import param_distribution, swarm_distribution_matrix  # noqa: F401
+from repro.core.kmeans import kmeans  # noqa: F401
+from repro.core.swarm import SwarmTrainer  # noqa: F401

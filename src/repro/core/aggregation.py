@@ -1,0 +1,86 @@
+"""Parameter aggregation (paper Eq. 2) — the client-to-client step.
+
+Sim regime: clients live on one host as a stacked pytree; cluster
+FedAvg is a segment-sum over the client axis (jit-able, O(N) with no
+server bottleneck).
+
+Fleet regime: the identical math expressed as a *masked weighted psum*
+over the ``clients`` mesh axis inside shard_map — cluster-restricted
+all-reduce, i.e. swarm learning's peer-to-peer exchange as a TPU
+collective (see repro/launch/swarm_fleet.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_weighted_sum
+
+
+def fedavg(params_list, n_samples):
+    """Classic FedAvg over an explicit list of client pytrees."""
+    w = jnp.asarray(n_samples, jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-9)
+    return tree_weighted_sum(params_list, w)
+
+
+def cluster_fedavg(stacked_params, assignments, n_samples, k: int):
+    """Eq. 2 within every cluster simultaneously.
+
+    stacked_params: pytree with leading client axis N.
+    assignments:    (N,) int cluster ids (post brain-storm).
+    n_samples:      (N,) training set sizes |D_h|.
+    Returns the stacked pytree where client i holds its cluster's
+    aggregated model (the redistribution step).
+    """
+    assignments = jnp.asarray(assignments)
+    w = jnp.asarray(n_samples, jnp.float32)
+    # per-cluster weight normalisation: |D_h| / |D_{G_k}|
+    cluster_tot = jax.ops.segment_sum(w, assignments, num_segments=k)
+    wn = w / jnp.maximum(cluster_tot[assignments], 1e-9)
+
+    def agg_leaf(leaf):
+        lf = leaf.astype(jnp.float32)
+        weighted = lf * wn.reshape((-1,) + (1,) * (lf.ndim - 1))
+        sums = jax.ops.segment_sum(weighted, assignments, num_segments=k)
+        return sums[assignments].astype(leaf.dtype)
+
+    return jax.tree.map(agg_leaf, stacked_params)
+
+
+def cluster_psum_fedavg(params, weight, my_cluster, k: int, axis_name: str):
+    """Fleet-regime Eq. 2: inside shard_map over the client axis.
+
+    params: this client's pytree; weight: scalar |D_h|;
+    my_cluster: () int32 — this client's (post brain-storm) cluster id.
+
+    One masked psum per cluster (k is small — 3 in the paper): every
+    client contributes its weighted params only to its own cluster's
+    sum, then reads back the sum for its cluster. Pure client-to-client
+    collectives — no server, and a psum is exactly the "exchange
+    parameters with peers" traffic of swarm learning on ICI/DCN.
+    """
+    my_w = weight.astype(jnp.float32)
+
+    def one_cluster(c):
+        sel = (my_cluster == c).astype(jnp.float32)
+        num = jax.tree.map(
+            lambda x: jax.lax.psum(x.astype(jnp.float32) * (my_w * sel), axis_name),
+            params)
+        den = jax.lax.psum(my_w * sel, axis_name)
+        return num, den
+
+    nums, dens = [], []
+    for c in range(k):
+        n, d = one_cluster(c)
+        nums.append(n)
+        dens.append(d)
+
+    dens = jnp.stack(dens)                                # (k,)
+    my_den = jnp.maximum(dens[my_cluster], 1e-9)
+
+    def pick(x, *cluster_leaves):
+        stacked = jnp.stack(cluster_leaves)               # (k, ...)
+        return (stacked[my_cluster] / my_den).astype(x.dtype)
+
+    return jax.tree.map(pick, params, *nums)

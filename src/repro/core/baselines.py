@@ -1,0 +1,63 @@
+"""Table II baselines: centralized / local-only / FedAvg.
+
+local-only and FedAvg reuse SwarmTrainer (aggregation="none"/"fedavg");
+the centralized method pools every clinic's training data and trains a
+single model — the privacy-ignoring upper bound.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, OptimizerConfig, SwarmConfig
+from repro.core.swarm import SwarmTrainer, eval_client, make_batch
+from repro.models.model import Model
+from repro.optim.optimizers import make_optimizer
+from repro.train.steps import make_eval_step, make_train_step
+
+
+def train_centralized(model: Model, clients_data: List[dict],
+                      opt_cfg: OptimizerConfig, key, *, steps: int,
+                      batch_size: int = 32, lr=None):
+    """Returns (params, per-client mean test accuracy — Eq. 3 applied to
+    the single global model)."""
+    X = np.concatenate([c["train"][0] for c in clients_data])
+    y = np.concatenate([c["train"][1] for c in clients_data])
+    rng = np.random.default_rng(0)
+
+    opt = make_optimizer(opt_cfg)
+    params = model.init(key)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    eval_fn = jax.jit(make_eval_step(model))
+    lr = lr if lr is not None else opt_cfg.lr
+
+    for _ in range(steps):
+        idx = rng.integers(0, len(y), size=batch_size)
+        params, opt_state, _ = step(params, opt_state,
+                                    make_batch(model.cfg, X[idx], y[idx]), lr)
+
+    accs = [eval_client(eval_fn, model.cfg, params, *c["test"])
+            for c in clients_data]
+    return params, float(np.mean(accs))
+
+
+def run_method(method: str, model: Model, clients_data, swarm: SwarmConfig,
+               opt_cfg: OptimizerConfig, key, *, batch_size: int = 16,
+               verbose: bool = False):
+    """One Table-II row. method in {centralized, local, fedavg, bso-sl}."""
+    if method == "centralized":
+        steps = swarm.rounds * max(1, swarm.local_epochs) * \
+            int(np.ceil(np.mean([c["n_train"] for c in clients_data]) / batch_size)) \
+            * len(clients_data)
+        _, acc = train_centralized(model, clients_data, opt_cfg, key,
+                                   steps=steps, batch_size=batch_size)
+        return acc, None
+    agg = {"local": "none", "fedavg": "fedavg", "bso-sl": "bso"}[method]
+    tr = SwarmTrainer(model, clients_data, swarm, opt_cfg, key,
+                      batch_size=batch_size, aggregation=agg)
+    tr.fit(key, verbose=verbose)
+    return tr.mean_accuracy("test"), tr

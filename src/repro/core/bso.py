@@ -1,0 +1,81 @@
+"""Brain Storm Aggregation (paper §III.C).
+
+Host-side coordinator logic — deliberately lightweight, mirroring the
+paper's server whose *only* job is assigning neighbours:
+
+  1. **Select cluster center** — the best validation score in each
+     cluster.
+  2. **Brain storm** — per cluster draw r1~U[0,1]; if r1 > p1 replace
+     the center with a random member. Then per cluster draw r2; if
+     r2 > p2 swap this cluster's center with another cluster's center
+     (the swapped clients trade cluster membership for this round's
+     aggregation — the "exchange individuals between clusters" move
+     that fights non-IID local optima).
+  3. **Parameter aggregation** — Eq. 2: sample-count-weighted FedAvg
+     within each (post-swap) cluster; the jit-able segment-sum version
+     lives in :mod:`repro.core.aggregation`.
+
+With the paper's p1=0.9 / p2=0.8 and r > p triggering, disruption rates
+are 10% / 20% per cluster per round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass
+class BSAPlan:
+    """The coordinator's per-round output."""
+    assignments: np.ndarray            # (N,) effective cluster of each client
+    centers: np.ndarray                # (K,) client index of each cluster center
+    events: List[str] = field(default_factory=list)
+
+
+def brain_storm(rng: np.random.Generator, assignments: np.ndarray,
+                val_scores: np.ndarray, k: int, p1: float, p2: float) -> BSAPlan:
+    """Pure host-side BSA planning. ``assignments`` come from k-means on
+    the distribution summaries; ``val_scores`` are the clients' local
+    validation accuracies (shared within the cluster, paper step 1)."""
+    assignments = np.asarray(assignments).copy()
+    val_scores = np.asarray(val_scores)
+    N = assignments.shape[0]
+    events: List[str] = []
+
+    # 1. centers = best validation score per cluster
+    centers = np.full((k,), -1, dtype=np.int64)
+    for c in range(k):
+        members = np.where(assignments == c)[0]
+        if len(members) == 0:
+            continue
+        centers[c] = members[np.argmax(val_scores[members])]
+
+    # 2a. random center replacement (r1 > p1)
+    for c in range(k):
+        members = np.where(assignments == c)[0]
+        if len(members) == 0:
+            continue
+        r1 = rng.uniform()
+        if r1 > p1:
+            new_center = int(rng.choice(members))
+            if new_center != centers[c]:
+                events.append(f"replace: cluster {c} center "
+                              f"{centers[c]} -> {new_center} (r1={r1:.3f})")
+            centers[c] = new_center
+
+    # 2b. cross-cluster center swap (r2 > p2)
+    occupied = [c for c in range(k) if centers[c] >= 0]
+    for c in occupied:
+        r2 = rng.uniform()
+        if r2 > p2 and len(occupied) > 1:
+            other = int(rng.choice([o for o in occupied if o != c]))
+            ci, oi = centers[c], centers[other]
+            centers[c], centers[other] = oi, ci
+            # the swapped clients also trade aggregation membership
+            assignments[ci], assignments[oi] = assignments[oi], assignments[ci]
+            events.append(f"swap: centers of clusters {c} and {other} "
+                          f"(clients {ci} <-> {oi}, r2={r2:.3f})")
+
+    return BSAPlan(assignments=assignments, centers=centers, events=events)

@@ -1,0 +1,65 @@
+"""k-means over client distribution summaries (paper §III.B).
+
+Lloyd iterations with k-means++ seeding, fully jit-able
+(lax.fori_loop + static k). Empty clusters are re-seeded to the point
+farthest from its assigned centroid, so k clusters survive even with
+N=14 clients. The distance/assign step is the ``kmeans_assign`` Pallas
+kernel's oracle path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_sq_dists(X, C):
+    """(N, K) squared euclidean distances."""
+    x2 = jnp.sum(X * X, axis=1, keepdims=True)
+    c2 = jnp.sum(C * C, axis=1)[None, :]
+    return jnp.maximum(x2 + c2 - 2.0 * X @ C.T, 0.0)
+
+
+def kmeans_pp_init(key, X, k: int):
+    """k-means++ seeding."""
+    N = X.shape[0]
+    keys = jax.random.split(key, k)
+    idx0 = jax.random.randint(keys[0], (), 0, N)
+    C = jnp.zeros((k, X.shape[1]), X.dtype).at[0].set(X[idx0])
+
+    def body(i, C):
+        # distances against the first i chosen centroids only
+        valid = jnp.arange(k) < i
+        dists = _pairwise_sq_dists(X, C)
+        dists = jnp.where(valid[None, :], dists, jnp.inf)
+        d = jnp.min(dists, axis=1)
+        p = d / jnp.maximum(d.sum(), 1e-12)
+        nxt = jax.random.choice(keys[i], N, p=p)
+        return C.at[i].set(X[nxt])
+
+    return jax.lax.fori_loop(1, k, body, C)
+
+
+def assign(X, C):
+    """Nearest-centroid assignment (the kmeans_assign kernel's math)."""
+    return jnp.argmin(_pairwise_sq_dists(X, C), axis=1)
+
+
+def kmeans(key, X, k: int, iters: int = 20):
+    """Returns (centroids (k,F), assignments (N,))."""
+    N, F = X.shape
+    C0 = kmeans_pp_init(key, X, k)
+
+    def step(it, C):
+        a = assign(X, C)
+        onehot = jax.nn.one_hot(a, k, dtype=X.dtype)            # (N, K)
+        counts = onehot.sum(axis=0)                              # (K,)
+        sums = onehot.T @ X                                      # (K, F)
+        newC = sums / jnp.maximum(counts[:, None], 1.0)
+        # empty cluster -> farthest point from its current centroid
+        d = jnp.min(_pairwise_sq_dists(X, C), axis=1)
+        far = jnp.argmax(d)
+        newC = jnp.where((counts[:, None] > 0), newC, X[far][None, :])
+        return newC
+
+    C = jax.lax.fori_loop(0, iters, step, C0)
+    return C, assign(X, C)

@@ -1,0 +1,179 @@
+"""Swarm orchestration (sim regime): N clients as a stacked pytree.
+
+One :class:`SwarmTrainer` runs all four methods of the paper's Table II
+via ``aggregation`` mode:
+
+  "bso"     — the full BSO-SL round (§III): local training → distribution
+              upload → k-means clustering → brain-storm aggregation.
+  "fedavg"  — global FedAvg every round (the federated baseline).
+  "none"    — local training only (the isolation baseline).
+
+(The centralized baseline pools data and is in baselines.py.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, OptimizerConfig, SwarmConfig
+from repro.core.aggregation import cluster_fedavg
+from repro.core.bso import brain_storm
+from repro.core.diststats import swarm_distribution_matrix
+from repro.core.kmeans import kmeans
+from repro.models.model import Model
+from repro.optim.optimizers import make_optimizer
+from repro.train.steps import make_eval_step, make_train_step
+from repro.utils.tree import tree_index
+
+
+def make_batch(cfg: ModelConfig, X, y):
+    if cfg.family == "cnn":
+        return {"images": jnp.asarray(X), "labels": jnp.asarray(y)}
+    return {"tokens": jnp.asarray(X), "labels": jnp.asarray(y)}
+
+
+def _sample_batch(rng, X, y, batch):
+    idx = rng.integers(0, len(y), size=batch)
+    return X[idx], y[idx]
+
+
+def eval_client(eval_fn, cfg, params, X, y, batch: int = 64) -> float:
+    """Masked fixed-shape evaluation (pads with label=-1)."""
+    n = len(y)
+    correct, total = 0.0, 0
+    for s in range(0, n, batch):
+        xb, yb = X[s:s + batch], y[s:s + batch]
+        pad = batch - len(yb)
+        if pad:
+            xb = np.concatenate([xb, np.zeros((pad,) + xb.shape[1:], xb.dtype)])
+            yb = np.concatenate([yb, -np.ones((pad,) + yb.shape[1:], yb.dtype)])
+        m = eval_fn(params, make_batch(cfg, xb, yb))
+        k = len(y[s:s + batch])
+        correct += float(m["acc"]) * k
+        total += k
+    return correct / max(total, 1)
+
+
+@dataclass
+class RoundLog:
+    round: int
+    mean_val_acc: float
+    assignments: np.ndarray
+    centers: np.ndarray
+    events: List[str]
+    train_loss: float
+
+
+class SwarmTrainer:
+    def __init__(self, model: Model, clients_data: List[dict],
+                 swarm: SwarmConfig, opt_cfg: OptimizerConfig,
+                 key, *, batch_size: int = 16, aggregation: str = "bso",
+                 lr: Optional[float] = None, reset_opt_each_round: bool = False):
+        assert aggregation in ("bso", "fedavg", "none")
+        self.reset_opt_each_round = reset_opt_each_round
+        self.model = model
+        self.cfg = model.cfg
+        self.data = clients_data
+        self.swarm = swarm
+        self.n = len(clients_data)
+        self.batch_size = batch_size
+        self.aggregation = aggregation
+        self.lr = lr if lr is not None else opt_cfg.lr
+        self.opt = make_optimizer(opt_cfg)
+
+        keys = jax.random.split(key, self.n)
+        self.params = jax.vmap(model.init)(keys)
+        self.opt_state = jax.vmap(self.opt.init)(self.params)
+        step = make_train_step(model, self.opt)
+        self._vstep = jax.jit(jax.vmap(step, in_axes=(0, 0, 0, None)))
+        self._eval = jax.jit(make_eval_step(model))
+        self._agg = jax.jit(cluster_fedavg, static_argnames=("k",))
+        self.np_rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+        self.n_samples = np.array([c["n_train"] for c in clients_data], np.float32)
+        self.history: List[RoundLog] = []
+
+    # ---------------------------------------------------------------- local
+    def _local_steps(self) -> int:
+        if self.swarm.local_steps is not None:
+            return self.swarm.local_steps
+        steps_per_epoch = int(np.ceil(self.n_samples.mean() / self.batch_size))
+        return max(1, self.swarm.local_epochs * steps_per_epoch)
+
+    def local_train(self):
+        last = None
+        for _ in range(self._local_steps()):
+            xs, ys = [], []
+            for c in self.data:
+                X, y = c["train"]
+                xb, yb = _sample_batch(self.np_rng, X, y, self.batch_size)
+                xs.append(xb)
+                ys.append(yb)
+            batch = make_batch(self.cfg, np.stack(xs), np.stack(ys))
+            self.params, self.opt_state, metrics = self._vstep(
+                self.params, self.opt_state, batch, self.lr)
+            last = metrics
+        return float(jnp.mean(last["loss"])) if last else float("nan")
+
+    # ----------------------------------------------------------------- eval
+    def client_scores(self, split: str = "val") -> np.ndarray:
+        scores = []
+        for i, c in enumerate(self.data):
+            X, y = c[split]
+            p = tree_index(self.params, i)
+            scores.append(eval_client(self._eval, self.cfg, p, X, y))
+        return np.asarray(scores, np.float32)
+
+    def mean_accuracy(self, split: str = "test") -> float:
+        """Paper Eq. 3: average of per-client accuracy."""
+        return float(self.client_scores(split).mean())
+
+    # ---------------------------------------------------------------- round
+    def round(self, r: int, key) -> RoundLog:
+        train_loss = self.local_train()
+        val = self.client_scores("val")
+
+        if self.aggregation == "none":
+            log = RoundLog(r, float(val.mean()), np.zeros(self.n, np.int64),
+                           np.array([]), [], train_loss)
+            self.history.append(log)
+            return log
+
+        if self.aggregation == "fedavg":
+            assignments = np.zeros(self.n, np.int64)
+            centers = np.array([int(np.argmax(val))])
+            events = []
+            k = 1
+        else:
+            # --- BSO-SL: distribution upload -> k-means -> brain storm ---
+            feats = swarm_distribution_matrix(self.params, self.n)
+            k = self.swarm.n_clusters
+            _, assign0 = kmeans(key, feats, k, self.swarm.kmeans_iters)
+            plan = brain_storm(self.np_rng, np.asarray(assign0), val, k,
+                               self.swarm.p1, self.swarm.p2)
+            assignments, centers, events = plan.assignments, plan.centers, plan.events
+
+        self.params = self._agg(self.params, jnp.asarray(assignments),
+                                jnp.asarray(self.n_samples), k=k)
+        if self.reset_opt_each_round:
+            # optional: re-init optimizer moments after redistribution
+            # (paper is silent; measured ablation in benchmarks)
+            self.opt_state = jax.vmap(self.opt.init)(self.params)
+        log = RoundLog(r, float(val.mean()), np.asarray(assignments),
+                       np.asarray(centers), events, train_loss)
+        self.history.append(log)
+        return log
+
+    def fit(self, key, rounds: Optional[int] = None, verbose: bool = False):
+        rounds = rounds or self.swarm.rounds
+        for r in range(rounds):
+            key, sub = jax.random.split(key)
+            log = self.round(r, sub)
+            if verbose:
+                print(f"[{self.aggregation}] round {r:3d} "
+                      f"val_acc={log.mean_val_acc:.4f} loss={log.train_loss:.4f} "
+                      + ("; ".join(log.events) if log.events else ""))
+        return self.history

@@ -1,0 +1,2 @@
+from repro.data.dr import TABLE_I, make_dr_swarm_data  # noqa: F401
+from repro.data.tokens import make_lm_batches, make_token_swarm_data  # noqa: F401

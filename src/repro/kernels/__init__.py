@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention — train/prefill attention (online softmax, GQA index maps)
+flash_decode    — single-token decode against long KV caches
+param_stats     — the paper's §III.B distribution summarisation reduction
+kmeans_assign   — the coordinator's nearest-centroid step
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd
+wrappers that auto-select interpret mode off-TPU.
+"""
+from repro.kernels import ops, ref  # noqa: F401

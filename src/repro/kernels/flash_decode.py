@@ -1,0 +1,95 @@
+"""Flash-decode: single-token attention against a long KV cache.
+
+The decode hot-spot is memory-bound (stream the whole cache once); the
+kernel tiles the cache's sequence axis into VMEM blocks and keeps the
+online-softmax state in scratch. Positions beyond ``pos`` (and outside
+the sliding window) are masked per tile, so ring-buffer caches work
+unchanged.
+
+Grid: (B, H, n_k_blocks) — one q row per (batch, head), cache blocks
+innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, window, block_k, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)               # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (1, bk)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = cols <= pos
+    if window > 0:
+        mask = mask & (cols > pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev[0, 0], jnp.max(s))[None, None]
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p)[None, None]
+    acc_scr[...] = acc_scr[...] * alpha + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret"))
+def flash_decode(q, k, v, pos, *, window=0, block_k=256, interpret=False):
+    """q: (B,H,1,D); k,v: (B,KV,S,D); pos: () int32. Returns (B,H,1,D)."""
+    B, H, _, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    block_k = min(block_k, S)
+    if S % block_k:
+        raise ValueError(f"cache length {S} must divide block_k {block_k}")
+    n_k = S // block_k
+    grid = (B, H, n_k)
+
+    kernel = functools.partial(_decode_kernel, scale=1.0 / (D ** 0.5),
+                               window=window, block_k=block_k, n_k=n_k)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki, g=G: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki, g=G: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v)

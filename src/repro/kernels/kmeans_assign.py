@@ -1,0 +1,56 @@
+"""kmeans_assign: nearest-centroid assignment for the coordinator.
+
+Tiles the client-feature matrix (block_n, F) against the full centroid
+block (K, F) in VMEM — one distance matmul + argmin per tile. Feature
+and centroid counts are padded to TPU lane multiples by the wrapper
+(padded features are zero in both operands; padded centroids carry +inf
+bias so they never win the argmin).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _assign_kernel(x_ref, c_ref, bias_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (bn, F)
+    c = c_ref[...].astype(jnp.float32)                 # (K, F)
+    bias = bias_ref[...].astype(jnp.float32)           # (1, K): 0 or +inf
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    d = x2 + c2 - 2.0 * jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())))
+    d = d + bias
+    o_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign(X, C, *, block_n=128, interpret=False):
+    """X: (N,F) clients; C: (K,F) centroids -> (N,) int32 assignments."""
+    N, F = X.shape
+    K = C.shape[0]
+    Fp = -(-F // LANES) * LANES
+    Kp = max(8, -(-K // 8) * 8)
+    Np = -(-N // block_n) * block_n
+
+    Xp = jnp.zeros((Np, Fp), jnp.float32).at[:N, :F].set(X.astype(jnp.float32))
+    Cp = jnp.zeros((Kp, Fp), jnp.float32).at[:K, :F].set(C.astype(jnp.float32))
+    bias = jnp.where(jnp.arange(Kp) < K, 0.0, jnp.inf)[None, :]
+
+    out = pl.pallas_call(
+        _assign_kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, Fp), lambda i: (i, 0)),
+            pl.BlockSpec((Kp, Fp), lambda i: (0, 0)),
+            pl.BlockSpec((1, Kp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, 1), jnp.int32),
+        interpret=interpret,
+    )(Xp, Cp, bias)
+    return out[:N, 0]

@@ -1,0 +1,57 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On the CPU stand-in backend the kernels run in interpret mode (the
+kernel body executed in Python — correctness path); on a real TPU they
+compile to Mosaic. ``auto_interpret()`` picks per backend so model code
+can call these unconditionally when cfg.use_pallas is set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.kmeans_assign import kmeans_assign as _kmeans_assign
+from repro.kernels.param_stats import param_stats as _param_stats
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, q_offset=0, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            q_offset=q_offset, interpret=interpret)
+
+
+def flash_attention_bsh(q, k, v, **kw):
+    """(B,S,H,D)-layout convenience used by the model code."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(qt, kt, vt, **kw)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_decode(q, k, v, pos, *, window=0, block_k=256, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _flash_decode(q, k, v, pos, window=window, block_k=block_k,
+                         interpret=interpret)
+
+
+def param_stats(x, *, block_rows=256, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _param_stats(x, block_rows=block_rows, interpret=interpret)
+
+
+def kmeans_assign(X, C, *, block_n=128, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _kmeans_assign(X, C, block_n=block_n, interpret=interpret)

@@ -1,0 +1,58 @@
+"""param_stats: streaming sum / sum-of-squares over a parameter tensor.
+
+This is the paper's §III.B distribution-summarisation step as a TPU
+kernel: a pure memory-bound reduction over up to billions of elements,
+tiled (rows, 128) into VMEM, accumulating partial sums across the
+sequential grid. The wrapper turns (sum, sumsq, n) into (mean, var).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _stats_kernel(x_ref, out_ref, *, n_blocks):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[0, 0] += jnp.sum(x)
+    out_ref[0, 1] += jnp.sum(x * x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def param_stats(x, *, block_rows=256, interpret=False):
+    """Returns (mean, var) fp32 of any-shape floating tensor ``x``.
+
+    Zero-padding is harmless to sum/sumsq; the true element count
+    normalises.
+    """
+    n = x.size
+    flat = x.reshape(-1).astype(jnp.float32)
+    per_block = block_rows * LANES
+    n_blocks = max(1, -(-n // per_block))
+    padded = n_blocks * per_block
+    flat = jnp.pad(flat, (0, padded - n))
+    tiles = flat.reshape(n_blocks * block_rows, LANES)
+
+    kernel = functools.partial(_stats_kernel, n_blocks=n_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=interpret,
+    )(tiles)
+    s, ss = out[0, 0], out[0, 1]
+    mean = s / n
+    var = jnp.maximum(ss / n - mean * mean, 0.0)
+    return mean, var

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; the
+model code's jnp path is mathematically identical to these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B,H,Sq,D); k,v: (B,KV,Sk,D) with H % KV == 0.
+    q_offset: global position of q row 0 (decode: pos)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / jnp.sqrt(D)
+    rows = q_offset + jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = cols <= rows
+    if window > 0:
+        mask = mask & (cols > rows - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def ref_decode_attention(q, k, v, pos, *, window=0):
+    """q: (B,H,1,D); k,v: (B,KV,S,D); pos: () — keys 0..pos valid."""
+    B, H, _, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) / jnp.sqrt(D)
+    cols = jnp.arange(S)
+    mask = cols <= pos
+    if window > 0:
+        mask = mask & (cols > pos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, 1, D).astype(q.dtype)
+
+
+def ref_param_stats(x):
+    """(mean, var) of a flat tensor, fp32."""
+    xf = x.astype(jnp.float32).reshape(-1)
+    return jnp.mean(xf), jnp.var(xf)
+
+
+def ref_kmeans_assign(X, C):
+    """Nearest-centroid ids: X (N,F), C (K,F) -> (N,) int32."""
+    x2 = jnp.sum(X.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    c2 = jnp.sum(C.astype(jnp.float32) ** 2, axis=1)[None, :]
+    d = x2 + c2 - 2.0 * X.astype(jnp.float32) @ C.astype(jnp.float32).T
+    return jnp.argmin(d, axis=1).astype(jnp.int32)

@@ -1,0 +1,453 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape)
+# on the production meshes with 512 placeholder host devices.
+#
+# For each combination this emits a JSON artifact with
+# ``memory_analysis()``, ``cost_analysis()`` and the collective-bytes
+# census parsed from the optimized HLO — the §Roofline inputs.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+#
+# NOTE: the two lines above MUST run before any other import — jax locks
+# the device count at first initialisation.
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig, OptimizerConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.models.model import build_model, cache_specs, input_specs
+from repro.optim.optimizers import make_optimizer
+from repro.sharding import build_param_specs, use_sharding
+from repro.sharding.rules import spec_for
+from repro.train.steps import make_serve_step, make_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+                "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# per-arch runtime overrides for the production run
+
+
+def runtime_config(arch_id: str, shape: ShapeConfig,
+                   optimized: bool = False) -> ModelConfig:
+    """Production runtime settings. ``optimized`` applies the KEPT §Perf
+    hillclimb variants on top of the paper-faithful baseline:
+    grouped MoE dispatch (H1), vocab padding + q-chunk 256 (H2),
+    fp8 KV cache for decode (H3)."""
+    cfg = get_config(arch_id)
+    big = arch_id in ("kimi-k2-1t-a32b", "llama4-maverick-400b-a17b",
+                      "deepseek-67b", "command-r-35b")
+    overrides = dict(
+        dtype="bfloat16",
+        scan_layers=True,
+        remat="full" if shape.kind == "train" else "none",
+    )
+    # long-context decode: dense/moe/vlm attention archs run the documented
+    # sliding-window serving mode; ssm/hybrid are natively O(1)-state.
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        overrides["sliding_window"] = 8192
+    if big:
+        overrides["param_dtype"] = "bfloat16"
+    if optimized:
+        if cfg.n_experts:
+            overrides["moe_grouped_dispatch"] = True           # §Perf H1
+        if cfg.vocab_size % 128:
+            overrides["vocab_round_to"] = 128                   # §Perf H2
+        overrides["attn_chunk_q"] = 256                         # §Perf H2
+        if shape.kind == "decode" and cfg.n_heads:
+            overrides["cache_dtype"] = "float8_e4m3fn"          # §Perf H3
+    return dataclasses.replace(cfg, **overrides)
+
+
+def optimizer_for(cfg: ModelConfig) -> OptimizerConfig:
+    if cfg.param_dtype == "bfloat16":
+        # >=100B-class configs: factored optimizer states
+        return OptimizerConfig(name="adafactor", lr=1e-3, grad_clip=1.0)
+    return OptimizerConfig(name="adamw", lr=3e-4, weight_decay=0.1)
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig,
+                     n_dp: int = 16) -> int:
+    """Grad-accumulation steps. The per-microbatch batch MUST stay
+    divisible by the data-parallel extent (pod x data), otherwise the
+    batch axis silently under-shards and per-device activations blow up
+    by the lost factor (§Perf H4: this exact bug cost 6x memory on the
+    2x16x16 mesh before the divisibility guard)."""
+    if shape.kind != "train":
+        return 0
+    B = shape.global_batch
+    n_mb = min(cfg.microbatch_override or 16, B)
+    while n_mb > 1 and (B // n_mb) % n_dp:
+        n_mb //= 2
+    return n_mb
+
+
+# ---------------------------------------------------------------------------
+# collective census
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shard bytes of every collective op in optimized HLO.
+    Returns {op_name: bytes, ..., "total": bytes} (per device)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    n_ops = {c: 0 for c in _COLLECTIVES}
+    # e.g.:  %all-reduce.5 = f32[2048,512]{1,0} all-reduce(...)
+    pat = re.compile(
+        r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES) + r")\(")
+    # tuple-result collectives:  = (f32[8]{0}, f32[8]{0}) all-to-all(
+    tup = re.compile(
+        r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if m:
+            dt, dims, op = m.group(1), m.group(2), m.group(3)
+            size = _DTYPE_BYTES.get(dt, 4)
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            out[op] += size
+            n_ops[op] += 1
+            continue
+        m = tup.search(line)
+        if m:
+            parts, op = m.group(1), m.group(2)
+            for shp in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", parts):
+                dt, dims = shp.group(1), shp.group(2)
+                size = _DTYPE_BYTES.get(dt, 4)
+                for d in dims.split(","):
+                    if d:
+                        size *= int(d)
+                out[op] += size
+            n_ops[op] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["op_counts"] = n_ops
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, n_params: int,
+                n_active: int) -> float:
+    """6*N*D (train) / 2*N*D (forward) with active params for MoE."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch     # decode: 1 token/seq
+
+
+def active_params(cfg: ModelConfig, params_abs) -> tuple:
+    n_total = sum(int(x.size) for x in jax.tree.leaves(params_abs))
+    if cfg.n_experts and cfg.top_k:
+        # subtract inactive expert weights
+        def expert_leaves(t):
+            out = 0
+            flat, _ = jax.tree_util.tree_flatten_with_path(t)
+            for path, leaf in flat:
+                ps = "/".join(str(getattr(k, "key", k)) for k in path)
+                if "experts/" in ps:
+                    out += int(leaf.size)
+            return out
+        n_exp = expert_leaves(params_abs)
+        n_active = n_total - n_exp + int(n_exp * cfg.top_k / cfg.n_experts)
+    else:
+        n_active = n_total
+    return n_total, n_active
+
+
+def rules_for(cfg: ModelConfig):
+    """AxisRules honouring cfg.fsdp_over_pod (§Perf H4)."""
+    from repro.sharding.rules import AxisRules, DEFAULT_LOGICAL_TO_PHYSICAL
+    if cfg.fsdp_over_pod:
+        return AxisRules(dict(DEFAULT_LOGICAL_TO_PHYSICAL))
+    table = dict(DEFAULT_LOGICAL_TO_PHYSICAL)
+    table["p_embed"] = ("data",)        # weights stay intra-pod
+    return AxisRules(table)
+
+
+def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                  microbatches: int):
+    """Lower train/prefill/serve for one config on one mesh."""
+    model = build_model(cfg)
+    rules = rules_for(cfg)
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    psh = jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                       build_param_specs(params_abs, mesh, rules))
+    specs = input_specs(cfg, shape)
+
+    def in_sharding_for(spec):
+        ax = ("batch",) + (None,) * (len(spec.shape) - 1)
+        return jax.sharding.NamedSharding(mesh, spec_for(ax, mesh, spec.shape, rules))
+
+    with mesh, use_sharding(mesh, rules):
+        if shape.kind == "train":
+            opt = make_optimizer(optimizer_for(cfg))
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            osh = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                build_param_specs(opt_abs, mesh, rules))
+            step = make_train_step(model, opt, microbatches=microbatches)
+            batch_sh = {k: in_sharding_for(v) for k, v in specs.items()}
+            lowered = jax.jit(
+                step,
+                in_shardings=(psh, osh, batch_sh, None),
+                out_shardings=(psh, osh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, specs,
+                    jax.ShapeDtypeStruct((), jnp.float32))
+        elif shape.kind == "prefill":
+            def prefill(params, batch):
+                logits, _ = model.forward(params, batch)
+                return logits
+            batch_sh = {k: in_sharding_for(v) for k, v in specs.items()}
+            lowered = jax.jit(
+                prefill, in_shardings=(psh, batch_sh),
+            ).lower(params_abs, specs)
+        else:  # decode
+            cache_abs = cache_specs(cfg, shape)
+            csh = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                build_param_specs(cache_abs, mesh, rules))
+            serve = make_serve_step(model)
+            tok_sh = in_sharding_for(specs["tokens"])
+            lowered = jax.jit(
+                serve,
+                in_shardings=(psh, tok_sh, csh, None),
+                out_shardings=(None, None, csh),
+                donate_argnums=(2,),
+            ).lower(params_abs, specs["tokens"], cache_abs,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered, params_abs
+
+
+# ---------------------------------------------------------------------------
+# cost probes
+#
+# XLA's ``cost_analysis()`` does NOT multiply while-loop (scan) bodies by
+# their trip count, so the full scanned+microbatched lowering under-reports
+# flops/bytes/collectives by ~L x n_mb. The probe strategy: lower the SAME
+# config UNROLLED at two small layer counts L1 < L2 (single microbatch),
+# read exact top-level costs, and extrapolate linearly in depth:
+#     cost(L) = c(L1) + (c(L2) - c(L1)) / (L2 - L1) * (L - L1)
+# A third probe at n_mb=2 measures the per-extra-microbatch collective /
+# byte overhead (FSDP weight re-gathers), added (n_mb - 1) times.
+# Memory analysis always comes from the REAL (scanned, microbatched)
+# compile — XLA's buffer assignment handles loops correctly.
+
+
+def _probe_layers(cfg: ModelConfig):
+    if cfg.family == "moe":
+        period = max(cfg.moe_every, 1)
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every or 1
+    else:
+        period = 1
+    base = cfg.n_dense_layers
+    return base + period, base + 2 * period
+
+
+def _probe_cfg(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    kw = dict(n_layers=n_layers, scan_layers=False)
+    if cfg.is_encoder_decoder:
+        kw["n_encoder_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def _costs_of(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"])}
+
+
+def cost_probe(cfg: ModelConfig, shape: ShapeConfig, mesh, n_mb: int) -> dict:
+    L1, L2 = _probe_layers(cfg)
+    lowered1, _ = build_lowered(_probe_cfg(cfg, L1), shape, mesh, microbatches=0)
+    c1 = _costs_of(lowered1.compile())
+    lowered2, _ = build_lowered(_probe_cfg(cfg, L2), shape, mesh, microbatches=0)
+    c2 = _costs_of(lowered2.compile())
+
+    L = cfg.n_layers
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        per_layer = (c2[k] - c1[k]) / max(L2 - L1, 1)
+        out[k] = c1[k] + per_layer * (L - L1)
+
+    if n_mb > 1:
+        # per-extra-microbatch overhead (weight re-gather traffic)
+        lowered_mb, _ = build_lowered(_probe_cfg(cfg, L1), shape, mesh,
+                                      microbatches=2)
+        cmb = _costs_of(lowered_mb.compile())
+        for k in ("bytes", "coll"):
+            delta = max(cmb[k] - c1[k], 0.0) * (L / L1)
+            out[k] += delta * (n_mb - 1)
+    out["probe_layers"] = (L1, L2)
+    return out
+
+
+def lower_one(arch_id: str, shape_name: str, multi_pod: bool,
+              verbose: bool = True, overrides: dict = None,
+              tag: str = "", optimized: bool = False) -> dict:
+    """overrides/tag: §Perf hillclimb variants — config deltas applied on
+    top of the production runtime config, artifact saved under the tag.
+    optimized=True applies all KEPT hillclimb variants (tag 'opt')."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = runtime_config(arch_id, shape, optimized=optimized)
+    if optimized and not tag:
+        tag = "opt"
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rec = {"arch": arch_id, "shape": shape_name, "tag": tag,
+           "overrides": overrides or {},
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    t0 = time.time()
+
+    n_dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    mb = microbatches_for(cfg, shape, n_dp)
+    lowered, params_abs = build_lowered(cfg, shape, mesh, microbatches=mb)
+    n_total, n_active = active_params(cfg, params_abs)
+    rec["n_params"] = n_total
+    rec["n_active_params"] = n_active
+    rec["microbatches"] = mb
+
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+    }
+    rec["memory"]["peak_per_device"] = (
+        rec["memory"]["argument_bytes"] + rec["memory"]["output_bytes"]
+        + rec["memory"]["temp_bytes"] - rec["memory"]["alias_bytes"])
+
+    # raw full-model census (under-counts loop bodies — kept for reference)
+    rec["hlo_raw"] = _costs_of(compiled)
+    rec["collectives"] = collective_bytes(compiled.as_text())
+
+    # probe-extrapolated per-device costs (see comment above cost_probe)
+    t2 = time.time()
+    probe = cost_probe(cfg, shape, mesh, mb)
+    rec["probe_s"] = round(time.time() - t2, 1)
+    rec["cost"] = {"flops_per_device": probe["flops"],
+                   "bytes_per_device": probe["bytes"],
+                   "collective_bytes_per_device": probe["coll"],
+                   "probe_layers": probe["probe_layers"]}
+    flops_dev, bytes_dev, coll_dev = probe["flops"], probe["bytes"], probe["coll"]
+
+    # --- roofline terms (seconds) ---
+    mf = model_flops(cfg, shape, n_total, n_active)
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    rec["roofline"] = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": flops_dev * n_chips,
+        "useful_flops_ratio": mf / max(flops_dev * n_chips, 1.0),
+    }
+    rec["ok"] = True
+    if verbose:
+        r = rec["roofline"]
+        print(f"[dryrun] {arch_id:28s} {shape_name:12s} {rec['mesh']:8s} "
+              f"compile={rec['compile_s']:6.1f}s peak/dev="
+              f"{rec['memory']['peak_per_device']/2**30:7.2f}GiB "
+              f"Tc={r['t_compute_s']:.3e} Tm={r['t_memory_s']:.3e} "
+              f"Tcoll={r['t_collective_s']:.3e} dom={r['dominant']} "
+              f"useful={r['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def save(rec: dict):
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    name = f"dryrun_{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json"
+    (ARTIFACT_DIR / name).write_text(json.dumps(rec, indent=1))
+
+
+def shape_applicable(arch_id: str, shape_name: str) -> bool:
+    # whisper-base skips long_500k (DESIGN.md §Arch-applicability)
+    if arch_id == "whisper-base" and shape_name == "long_500k":
+        return False
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the kept §Perf variants (artifacts tagged _opt)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not shape_applicable(arch, shape):
+                print(f"[dryrun] {arch} {shape}: SKIP (documented)")
+                continue
+            for mp in meshes:
+                try:
+                    rec = lower_one(arch, shape, mp, optimized=args.optimized)
+                    save(rec)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] {arch} {shape} multi_pod={mp} FAILED: {e}")
+                    traceback.print_exc()
+                    if not args.continue_on_error:
+                        raise
+    if failures:
+        print(f"{len(failures)} failures")
+        raise SystemExit(1)
+    print("dry-run complete: all combinations lowered and compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+# per-chip hardware constants (TPU v5e) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256 chips) single pod; (2,16,16)=512 chips multi-pod.
+
+    Axes: pod  — swarm-client / outer-DP axis (multi-pod only)
+          data — batch + FSDP axis
+          model — tensor/expert-parallel axis
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_clients: int = 1):
+    """Sim-regime mesh (single CPU device) — used only by tests that
+    exercise shard_map code paths with a trivial mesh."""
+    return jax.make_mesh((1,), ("clients",))

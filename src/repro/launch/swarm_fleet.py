@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+# Fleet-regime BSO-SL: the paper's protocol as a multi-pod collective
+# program. One swarm client per pod; within a pod the client's model is
+# FSDP/TP-sharded over (data, model). The round's communication:
+#
+#   * distribution-stat upload  -> tiny all_gather over "pod"
+#     (O(#tensors) floats — the paper's communication-efficiency claim
+#     as an ICI/DCN collective)
+#   * intra-cluster FedAvg Eq.2 -> cluster-masked psum over "pod"
+#     (client-to-client traffic, no server)
+#
+# The coordinator decisions (k-means + brain storm) stay host-side —
+# they are O(clients) and correspond to the paper's neighbour-assignment
+# server. This module lowers+compiles the fleet round step on the
+# 2x16x16 mesh — the beyond-paper "swarm-on-pods" dry-run artifact.
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES, OptimizerConfig
+from repro.core.aggregation import cluster_psum_fedavg
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.model import input_specs
+from repro.optim.optimizers import make_optimizer
+from repro.sharding import build_param_specs, use_sharding
+from repro.train.steps import make_train_step
+
+
+def make_fleet_round(model, opt, k: int, n_local_steps: int = 1):
+    """Fleet round as a pure-jit program: vmap over the client (pod)
+    axis for local training, then Eq.2 cluster aggregation as a
+    segment-sum over clients. XLA SPMD inserts the cross-pod collectives
+    (the masked-psum shard_map formulation in core.aggregation is
+    exercised at unit scale; XLA's partitioner cannot yet mix manual
+    "pod" collectives with auto-sharded gathers at 512 devices)."""
+    step = make_train_step(model, opt)
+
+    def round_step(sparams, sopt, batch, lr, clusters, weights):
+        def local(p, o, b):
+            def one(i, carry):
+                pp, oo = carry
+                pp, oo, _ = step(pp, oo, b, lr)
+                return (pp, oo)
+            return jax.lax.fori_loop(0, n_local_steps, one, (p, o))
+
+        sparams, sopt = jax.vmap(local)(sparams, sopt, batch)
+        from repro.core.aggregation import cluster_fedavg
+        sparams = cluster_fedavg(sparams, clusters, weights, k)
+        return sparams, sopt
+
+    return round_step
+
+
+def lower_fleet_round(arch_id: str = "granite-3-2b", k: int = 3,
+                      seq: int = 1024, per_client_batch: int = 16):
+    cfg = get_config(arch_id)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="bfloat16", scan_layers=True,
+                              remat="full")
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=True)
+    n_clients = mesh.shape["pod"]
+    opt = make_optimizer(OptimizerConfig(name="adamw", lr=3e-4))
+
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+
+    def stack(t):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), t)
+
+    sparams, sopt = stack(params_abs), stack(opt_abs)
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((n_clients, per_client_batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((n_clients, per_client_batch, seq), jnp.int32),
+    }
+    clusters_abs = jax.ShapeDtypeStruct((n_clients,), jnp.int32)
+    weights_abs = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+
+    round_step = make_fleet_round(model, opt, k)
+
+    # inner (per-client) sharding must not consume the "pod" axis — that
+    # is the client axis in the fleet regime
+    from repro.sharding.rules import AxisRules, DEFAULT_LOGICAL_TO_PHYSICAL
+    inner_rules = AxisRules({
+        kk: tuple(a for a in v if a != "pod")
+        for kk, v in DEFAULT_LOGICAL_TO_PHYSICAL.items()})
+
+    with mesh, use_sharding(mesh, inner_rules):
+        psh = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, P(*("pod",) + tuple(s))),
+            build_param_specs(params_abs, mesh, inner_rules))
+        osh = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, P(*("pod",) + tuple(s))),
+            build_param_specs(opt_abs, mesh, inner_rules))
+        bsh = jax.tree.map(
+            lambda x: jax.sharding.NamedSharding(mesh, P("pod", "data")),
+            batch_abs)
+        rsh = jax.sharding.NamedSharding(mesh, P())
+        lowered = jax.jit(
+            round_step,
+            in_shardings=(psh, osh, bsh, None, rsh, rsh),
+            out_shardings=(psh, osh),
+        ).lower(sparams, sopt, batch_abs,
+                jax.ShapeDtypeStruct((), jnp.float32),
+                clusters_abs, weights_abs)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+    _, compiled = lower_fleet_round(args.arch)
+    mem = compiled.memory_analysis()
+    print(f"[swarm-fleet] {args.arch} round step compiled on 2x16x16; "
+          f"temp/dev={int(mem.temp_size_in_bytes)/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

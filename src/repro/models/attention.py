@@ -1,0 +1,207 @@
+"""GQA attention: training/prefill (causal, optional sliding window),
+cross-attention (enc-dec), and single-token decode against a KV cache.
+
+The jnp path here is the lowering path for the TPU dry-run; the Pallas
+flash kernels in ``repro.kernels`` implement the same math for the
+real-TPU hot path (cfg.use_pallas) and are validated against
+``repro.kernels.ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, apply_rope, dense_init
+from repro.sharding import shard_act
+
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pd = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype=pd),
+        "wk": dense_init(ks[1], (d, KV * hd), dtype=pd),
+        "wv": dense_init(ks[2], (d, KV * hd), dtype=pd),
+        "wo": dense_init(ks[3], (H * hd, d), dtype=pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), pd)
+        p["bk"] = jnp.zeros((KV * hd,), pd)
+        p["bv"] = jnp.zeros((KV * hd,), pd)
+        p["bo"] = jnp.zeros((d,), pd)
+    return p
+
+
+def _project_qkv(p, x, x_kv, cfg: ModelConfig):
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x_kv @ p["wk"].astype(dt)
+    v = x_kv @ p["wv"].astype(dt)
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(B, -1, H, hd)
+    k = k.reshape(B, -1, KV, hd)
+    v = v.reshape(B, -1, KV, hd)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,hd), k: (B,T,KV,hd) -> scores (B,KV,G,S,T), G=H/KV."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _gqa_out(probs, v, B, S, H, hd):
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+# q-chunked attention kicks in above this q-length: memory goes from
+# O(S^2) score buffers to O(chunk * S) — required to lower prefill_32k
+# without a 17GB transient per chip. (The Pallas flash kernel is the
+# real-TPU path; this is its XLA-lowerable twin.)
+CHUNK_THRESHOLD = 8192
+CHUNK_Q = 1024
+
+
+def _attention_math(q, k, v, positions, kv_positions, causal, sliding_window,
+                    B, S, H, hd):
+    scores = _gqa_scores(q, k).astype(jnp.float32)       # (B,KV,G,S,T)
+    if causal or sliding_window > 0:
+        qpos = positions[:, None, None, :, None]
+        kpos = kv_positions[:, None, None, None, :]
+        mask = kpos <= qpos if causal else jnp.ones((), bool)
+        if sliding_window > 0:
+            mask = mask & (kpos > qpos - sliding_window)
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v, B, S, H, hd)
+
+
+def attend_full(p, x, cfg: ModelConfig, *, positions=None, causal=True,
+                x_kv=None, kv_positions=None, sliding_window: int = 0):
+    """Training / prefill attention. x: (B, S, d)."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x_kv = x if x_kv is None else x_kv
+    T = x_kv.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if kv_positions is None:
+        kv_positions = positions if x_kv is x else jnp.arange(T)[None, :]
+
+    q, k, v = _project_qkv(p, x, x_kv, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, kv_positions, cfg.rope_theta)
+    q = shard_act(q, "batch", "seq", "act_heads", None)
+    k = shard_act(k, "batch", "seq", "act_heads", None)
+    v = shard_act(v, "batch", "seq", "act_heads", None)
+
+    chunk_q = cfg.attn_chunk_q or CHUNK_Q
+    if S > CHUNK_THRESHOLD and S % chunk_q == 0:
+        nq = S // chunk_q
+        qc = jnp.moveaxis(q.reshape(B, nq, chunk_q, H, hd), 1, 0)
+        pos_b = jnp.broadcast_to(positions, (B, S))
+        pc = jnp.moveaxis(pos_b.reshape(B, nq, chunk_q), 1, 0)
+
+        def one_chunk(args):
+            qi, pi = args
+            return _attention_math(qi, k, v, pi, kv_positions, causal,
+                                   sliding_window, B, chunk_q, H, hd)
+
+        out = jax.lax.map(one_chunk, (qc, pc))          # (nq,B,cq,H,hd)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+    else:
+        out = _attention_math(q, k, v, positions, kv_positions, causal,
+                              sliding_window, B, S, H, hd)
+    out = shard_act(out, "batch", "seq", "act_heads", None)
+    out = out.reshape(B, S, H * hd) @ p["wo"].astype(x.dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+
+def cache_dtype(cfg: ModelConfig):
+    """KV-cache storage dtype; cfg.cache_dtype="float8_e4m3fn" enables
+    quantized-cache serving (a beyond-paper §Perf optimization)."""
+    if cfg.cache_dtype:
+        return jnp.dtype(cfg.cache_dtype)
+    return _dtype(cfg.dtype)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, d_model=None):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = cache_dtype(cfg)
+    if cfg.cache_ring and cfg.sliding_window:
+        # O(window) ring buffer: slots are overwritten at pos % W, which
+        # by construction keeps exactly the last W positions — the
+        # sliding-window mask becomes free
+        max_seq = min(max_seq, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, max_seq, KV, hd), dt),
+        "v": jnp.zeros((batch, max_seq, KV, hd), dt),
+    }
+
+
+def attend_decode(p, x, cache, pos, cfg: ModelConfig, *,
+                  sliding_window: int = 0, update_cache: bool = True):
+    """One-token decode. x: (B, 1, d); cache k/v: (B, Smax, KV, hd);
+    pos: () int32 — current position (tokens 0..pos-1 are valid).
+
+    Returns (out (B,1,d), new_cache). The full-cache masked read is the
+    baseline lowering; §Perf iterates on windowed reads.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Smax = cache["k"].shape[1]
+    ring = bool(cfg.cache_ring and cfg.sliding_window and
+                cfg.sliding_window >= Smax)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    if update_cache:
+        write_pos = (pos % Smax) if ring else pos
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                         (0, write_pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                         (0, write_pos, 0, 0))
+    else:
+        k, v = cache["k"], cache["v"]
+    k = shard_act(k, "batch", "cache_seq", "act_heads", None)
+    v = shard_act(v, "batch", "cache_seq", "act_heads", None)
+
+    # quantized caches: upcast at the matmul (XLA fuses the convert)
+    k_c = k.astype(x.dtype) if k.dtype != x.dtype else k
+    v_c = v.astype(x.dtype) if v.dtype != x.dtype else v
+    scores = _gqa_scores(q, k_c).astype(jnp.float32)     # (B,KV,G,1,Smax)
+    kpos = jnp.arange(Smax)[None, None, None, None, :]
+    if ring:
+        # slots hold exactly the last Smax positions; only warmup slots
+        # (never written) are masked — the window mask is structural
+        valid = kpos <= pos
+    else:
+        valid = kpos <= pos
+        if sliding_window > 0:
+            valid = valid & (kpos > pos - sliding_window)
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v_c, B, 1, H, hd)
+    out = out.reshape(B, 1, H * hd) @ p["wo"].astype(x.dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out, {"k": k, "v": v}

@@ -1,0 +1,200 @@
+"""The paper's local-model CNN family, in pure JAX.
+
+BSO-SL §IV uses SqueezeNet as the default client model and sweeps
+AlexNet / VGG16 / InceptionV3 for the model-agnostic claim (RQ2).
+SqueezeNet is implemented faithfully (fire modules, conv classifier,
+global average pooling — arXiv:1602.07360); the others are
+reduced-depth members of their families sized for the 32px synthetic
+DR images (the paper itself resizes per-clinic images to one dimension).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+N_CLASSES = 5
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = jnp.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def conv2d(x, w, b=None, stride=1, padding="SAME"):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        out = out + b
+    return out
+
+
+def maxpool(x, k=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID")
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet (faithful: fire modules = squeeze 1x1 -> expand 1x1 + 3x3)
+
+_SQUEEZE_PLAN = [  # (squeeze, expand) per fire module
+    (8, 32), (8, 32), (16, 64), (16, 64),
+]
+
+
+def _init_fire(key, cin, s, e):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "squeeze": {"w": _conv_init(k1, 1, 1, cin, s), "b": jnp.zeros((s,))},
+        "e1": {"w": _conv_init(k2, 1, 1, s, e), "b": jnp.zeros((e,))},
+        "e3": {"w": _conv_init(k3, 3, 3, s, e), "b": jnp.zeros((e,))},
+    }
+
+
+def _apply_fire(p, x):
+    s = jax.nn.relu(conv2d(x, p["squeeze"]["w"], p["squeeze"]["b"]))
+    e1 = conv2d(s, p["e1"]["w"], p["e1"]["b"])
+    e3 = conv2d(s, p["e3"]["w"], p["e3"]["b"])
+    return jax.nn.relu(jnp.concatenate([e1, e3], axis=-1))
+
+
+def init_squeezenet(key):
+    ks = jax.random.split(key, len(_SQUEEZE_PLAN) + 2)
+    params = {"conv1": {"w": _conv_init(ks[0], 3, 3, 3, 32), "b": jnp.zeros((32,))}}
+    cin = 32
+    for i, (s, e) in enumerate(_SQUEEZE_PLAN):
+        params[f"fire{i}"] = _init_fire(ks[1 + i], cin, s, e)
+        cin = 2 * e
+    # squeezenet-style conv classifier (1x1 conv -> GAP)
+    params["conv_cls"] = {"w": _conv_init(ks[-1], 1, 1, cin, N_CLASSES),
+                          "b": jnp.zeros((N_CLASSES,))}
+    return params
+
+
+def apply_squeezenet(params, x):
+    x = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"], stride=2))
+    for i in range(len(_SQUEEZE_PLAN)):
+        x = _apply_fire(params[f"fire{i}"], x)
+        if i % 2 == 1:
+            x = maxpool(x)
+    x = conv2d(x, params["conv_cls"]["w"], params["conv_cls"]["b"])
+    return global_avg_pool(x)
+
+
+# ---------------------------------------------------------------------------
+# AlexNet-style
+
+
+def init_alexnet(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "conv1": {"w": _conv_init(ks[0], 5, 5, 3, 48), "b": jnp.zeros((48,))},
+        "conv2": {"w": _conv_init(ks[1], 3, 3, 48, 96), "b": jnp.zeros((96,))},
+        "conv3": {"w": _conv_init(ks[2], 3, 3, 96, 96), "b": jnp.zeros((96,))},
+        # GAP head instead of the classic flatten-FC so the model accepts
+        # any clinic image size (the paper resizes per-clinic anyway)
+        "fc1": {"w": dense_init(ks[3], (96, 256)), "b": jnp.zeros((256,))},
+        "fc2": {"w": dense_init(ks[4], (256, N_CLASSES)), "b": jnp.zeros((N_CLASSES,))},
+    }
+
+
+def apply_alexnet(p, x):
+    x = maxpool(jax.nn.relu(conv2d(x, p["conv1"]["w"], p["conv1"]["b"], stride=2)))
+    x = maxpool(jax.nn.relu(conv2d(x, p["conv2"]["w"], p["conv2"]["b"])))
+    x = jax.nn.relu(conv2d(x, p["conv3"]["w"], p["conv3"]["b"]))
+    x = global_avg_pool(x)
+    x = jax.nn.relu(x @ p["fc1"]["w"] + p["fc1"]["b"])
+    return x @ p["fc2"]["w"] + p["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-style (conv-conv-pool blocks)
+
+
+def init_vgg(key):
+    ks = jax.random.split(key, 6)
+    chans = [(3, 32), (32, 32), (32, 64), (64, 64)]
+    p = {}
+    for i, (ci, co) in enumerate(chans):
+        p[f"conv{i}"] = {"w": _conv_init(ks[i], 3, 3, ci, co), "b": jnp.zeros((co,))}
+    p["fc1"] = {"w": dense_init(ks[4], (64, 256)), "b": jnp.zeros((256,))}
+    p["fc2"] = {"w": dense_init(ks[5], (256, N_CLASSES)), "b": jnp.zeros((N_CLASSES,))}
+    return p
+
+
+def apply_vgg(p, x):
+    x = jax.nn.relu(conv2d(x, p["conv0"]["w"], p["conv0"]["b"]))
+    x = maxpool(jax.nn.relu(conv2d(x, p["conv1"]["w"], p["conv1"]["b"])))
+    x = jax.nn.relu(conv2d(x, p["conv2"]["w"], p["conv2"]["b"]))
+    x = maxpool(jax.nn.relu(conv2d(x, p["conv3"]["w"], p["conv3"]["b"])))
+    x = global_avg_pool(x)                       # size-agnostic head
+    x = jax.nn.relu(x @ p["fc1"]["w"] + p["fc1"]["b"])
+    return x @ p["fc2"]["w"] + p["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Inception-style (parallel 1x1 / 3x3 / 5x5 / pool branches)
+
+
+def _init_inception_block(key, cin, c1, c3, c5, cp):
+    ks = jax.random.split(key, 4)
+    return {
+        "b1": {"w": _conv_init(ks[0], 1, 1, cin, c1), "b": jnp.zeros((c1,))},
+        "b3": {"w": _conv_init(ks[1], 3, 3, cin, c3), "b": jnp.zeros((c3,))},
+        "b5": {"w": _conv_init(ks[2], 5, 5, cin, c5), "b": jnp.zeros((c5,))},
+        "bp": {"w": _conv_init(ks[3], 1, 1, cin, cp), "b": jnp.zeros((cp,))},
+    }
+
+
+def _apply_inception_block(p, x):
+    b1 = jax.nn.relu(conv2d(x, p["b1"]["w"], p["b1"]["b"]))
+    b3 = jax.nn.relu(conv2d(x, p["b3"]["w"], p["b3"]["b"]))
+    b5 = jax.nn.relu(conv2d(x, p["b5"]["w"], p["b5"]["b"]))
+    pool = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 3, 3, 1), (1, 1, 1, 1), "SAME")
+    bp = jax.nn.relu(conv2d(pool, p["bp"]["w"], p["bp"]["b"]))
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def init_inception(key):
+    ks = jax.random.split(key, 4)
+    p = {"conv1": {"w": _conv_init(ks[0], 3, 3, 3, 32), "b": jnp.zeros((32,))}}
+    p["inc0"] = _init_inception_block(ks[1], 32, 16, 24, 8, 8)      # -> 56
+    p["inc1"] = _init_inception_block(ks[2], 56, 24, 32, 12, 12)    # -> 80
+    p["fc"] = {"w": dense_init(ks[3], (80, N_CLASSES)), "b": jnp.zeros((N_CLASSES,))}
+    return p
+
+
+def apply_inception(p, x):
+    x = maxpool(jax.nn.relu(conv2d(x, p["conv1"]["w"], p["conv1"]["b"], stride=2)))
+    x = _apply_inception_block(p["inc0"], x)
+    x = maxpool(x)
+    x = _apply_inception_block(p["inc1"], x)
+    x = global_avg_pool(x)
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+
+CNN_ZOO = {
+    "squeezenet-dr": (init_squeezenet, apply_squeezenet),
+    "alexnet-dr": (init_alexnet, apply_alexnet),
+    "vgg-dr": (init_vgg, apply_vgg),
+    "inception-dr": (init_inception, apply_inception),
+}
+
+
+def init_cnn(key, cfg: ModelConfig):
+    return CNN_ZOO[cfg.arch_id][0](key)
+
+
+def apply_cnn(params, images, cfg: ModelConfig):
+    return CNN_ZOO[cfg.arch_id][1](params, images)

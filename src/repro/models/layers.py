@@ -1,0 +1,129 @@
+"""Shared layer primitives: inits, norms, RoPE, MLPs.
+
+Models are pure-JAX pytrees: ``init_*`` builds parameter dicts,
+``apply``-style functions consume them. No flax in this environment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import shard_act
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32, scale=1.0):
+    """LeCun-normal on the fan-in axis."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = scale / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+def init_norm(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), _dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + cfg.norm_eps)
+        out = xf / rms * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) / jnp.sqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+        if "bias" in p:
+            out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    if theta <= 0:
+        return x
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)          # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+def init_mlp(key, cfg: ModelConfig):
+    pd = _dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {"wi": dense_init(k1, (d, ff), dtype=pd), "wo": dense_init(k3, (ff, d), dtype=pd)}
+    if cfg.act == "swiglu":
+        p["wg"] = dense_init(k2, (d, ff), dtype=pd)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((ff,), pd)
+        p["bo"] = jnp.zeros((d,), pd)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if "bi" in p:
+        h = h + p["bi"].astype(dt)
+    if cfg.act == "swiglu":
+        g = x @ p["wg"].astype(dt)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard_act(h, *(("batch",) + ("seq",) * (h.ndim - 2) + ("act_mlp",)))
+    out = h @ p["wo"].astype(dt)
+    if "bo" in p:
+        out = out + p["bo"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+
+def init_embedding(key, vocab: int, d: int, cfg: ModelConfig):
+    return {"table": dense_init(key, (vocab, d), in_axis=-1,
+                                dtype=_dtype(cfg.param_dtype))}
+
+
+def apply_embedding(p, tokens, cfg: ModelConfig):
+    out = jnp.take(p["table"].astype(_dtype(cfg.dtype)), tokens, axis=0)
+    return out
+
+
+def logits_from_embedding(p, x):
+    """Tied read-out."""
+    return x @ p["table"].astype(x.dtype).T

@@ -1,0 +1,152 @@
+"""Unified model interface used by the trainer, the swarm layer, the
+serving path and the dry-run launcher.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are pure
+functions over parameter pytrees — the BSO-SL core only ever touches
+params through this interface, which is what makes the paper's
+model-agnostic claim (RQ2) structural rather than incidental.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cnn as cnn_lib
+from repro.models import transformer as tf_lib
+from repro.models.layers import _dtype
+
+
+def cross_entropy(logits, labels):
+    """Mean token-level CE in fp32; labels < 0 are masked out.
+
+    The label logit is extracted with a fused iota-compare-select rather
+    than take_along_axis: a gather on vocab-sharded logits forces an
+    all-gather under SPMD, while the select partitions cleanly over the
+    vocab shards (each contributes its local partial sum).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == safe[..., None], logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    nll = jnp.where(mask, nll, 0.0)
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def accuracy(logits, labels):
+    mask = labels >= 0
+    pred = jnp.argmax(logits, axis=-1)
+    hit = jnp.where(mask, pred == labels, False)
+    return hit.sum() / jnp.maximum(mask.sum(), 1)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]                       # key -> params
+    forward: Callable[[Any, dict], tuple]            # (params, batch) -> (logits, aux)
+    loss: Callable[[Any, dict], tuple]               # (params, batch) -> (loss, metrics)
+    init_cache: Optional[Callable] = None            # (batch, max_seq) -> cache
+    decode_step: Optional[Callable] = None           # (params, tok, cache, pos) -> (logits, cache)
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+
+def _lm_loss(fwd):
+    def loss(params, batch):
+        logits, aux = fwd(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce + aux
+        return total, {"loss": total, "ce": ce, "aux": aux,
+                       "acc": accuracy(logits, batch["labels"])}
+    return loss
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "cnn":
+        def fwd(params, batch):
+            return cnn_lib.apply_cnn(params, batch["images"], cfg), jnp.zeros((), jnp.float32)
+
+        def loss(params, batch):
+            logits, _ = fwd(params, batch)
+            ce = cross_entropy(logits, batch["labels"])
+            return ce, {"loss": ce, "ce": ce,
+                        "acc": accuracy(logits, batch["labels"])}
+
+        return Model(cfg, lambda key: cnn_lib.init_cnn(key, cfg), fwd, loss)
+
+    if cfg.family == "encdec":
+        def fwd(params, batch):
+            return tf_lib.encdec_forward(params, batch, cfg)
+
+        return Model(
+            cfg,
+            lambda key: tf_lib.init_encdec(key, cfg),
+            fwd,
+            _lm_loss(fwd),
+            init_cache=lambda b, s: tf_lib.init_encdec_cache(cfg, b, s),
+            decode_step=lambda p, t, c, pos: tf_lib.encdec_decode_step(p, t, c, pos, cfg),
+        )
+
+    # decoder-only families: dense / moe / ssm / hybrid / vlm
+    def fwd(params, batch):
+        return tf_lib.lm_forward(params, batch, cfg)
+
+    return Model(
+        cfg,
+        lambda key: tf_lib.init_lm(key, cfg),
+        fwd,
+        _lm_loss(fwd),
+        init_cache=lambda b, s: tf_lib.init_lm_cache(cfg, b, s),
+        decode_step=lambda p, t, c, pos: tf_lib.lm_decode_step(p, t, c, pos, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs for the dry-run (no allocation)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Stand-in inputs for one (arch × input-shape) pair.
+
+    train/prefill => a full batch for ``train_step``/forward;
+    decode        => (tokens, pos) for ``serve_step`` (the cache spec is
+    produced separately via ``cache_specs``).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    act = _dtype(cfg.dtype)
+
+    if cfg.family == "cnn":
+        return {"images": sd((B, 32, 32, 3), jnp.float32), "labels": sd((B,), i32)}
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            S_dec = min(448, S)
+            return {"audio_embed": sd((B, S, cfg.d_model), act),
+                    "tokens": sd((B, S_dec), i32),
+                    "labels": sd((B, S_dec), i32)}
+        if cfg.family == "vlm":
+            S_text = S - cfg.n_vision_tokens
+            return {"vision_embed": sd((B, cfg.n_vision_tokens, cfg.d_model), act),
+                    "tokens": sd((B, S_text), i32),
+                    "labels": sd((B, S_text), i32)}
+        return {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+
+    # decode: one new token against a seq_len cache
+    return {"tokens": sd((B, 1), i32), "pos": sd((), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """abstract cache pytree (ShapeDtypeStructs) for decode shapes."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+TPU-native adaptation: instead of per-token gather loops (GPU style),
+tokens are sorted by expert id and scattered into a static
+(experts, capacity, d) buffer, so every expert runs one dense
+(C, d) x (d, ff) matmul on the MXU. Experts are sharded over the
+``model`` mesh axis (expert parallelism); the scatter/gather across the
+token(data)->expert(model) resharding is where XLA inserts the
+all-to-all — that collective is a first-class §Roofline term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, dense_init, init_mlp, apply_mlp
+from repro.sharding import shard_act
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pd = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": dense_init(ks[0], (d, E), dtype=jnp.float32)},
+        "experts": {
+            "wi": dense_init(ks[1], (E, d, ff), in_axis=-2, dtype=pd),
+            "wg": dense_init(ks[2], (E, d, ff), in_axis=-2, dtype=pd),
+            "wo": dense_init(ks[3], (E, ff, d), in_axis=-2, dtype=pd),
+        },
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared_expert"] = init_mlp(ks[4], cfg)
+    return p
+
+
+def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)   # 8-aligned for TPU tiling
+
+
+def _route(p, xt, cfg: ModelConfig):
+    """Router in fp32: returns (gate (T,K), expert_idx (T,K), aux)."""
+    E, K = cfg.n_experts, cfg.top_k
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, K)             # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx, E).sum(axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_weight
+    return gate, expert_idx, aux
+
+
+def _dispatch_compute_combine(p, xt, gate, expert_idx, C, cfg: ModelConfig):
+    """Sort-based dispatch -> per-expert dense matmuls -> combine.
+    xt: (T, d). Returns (T, d)."""
+    E, K = cfg.n_experts, cfg.top_k
+    T, d = xt.shape
+    dt = xt.dtype
+
+    flat_expert = expert_idx.reshape(-1)                    # (T*K,)
+    sort_idx = jnp.argsort(flat_expert)                     # stable
+    sorted_expert = flat_expert[sort_idx]
+    counts = jnp.bincount(flat_expert, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * K) - offsets[sorted_expert]       # rank within expert
+    keep = rank < C
+
+    token_of = sort_idx // K                                # source token per slot
+    buf = jnp.zeros((E, C, d), dt)
+    scat_e = jnp.where(keep, sorted_expert, 0)
+    scat_c = jnp.where(keep, rank, 0).astype(jnp.int32)
+    src = jnp.where(keep[:, None], xt[token_of], 0).astype(dt)
+    buf = buf.at[scat_e, scat_c].add(src)                   # (E, C, d)
+    buf = shard_act(buf, "act_experts", None, None)
+
+    wi = p["experts"]["wi"].astype(dt)
+    wg = p["experts"]["wg"].astype(dt)
+    wo = p["experts"]["wo"].astype(dt)
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    h = jax.nn.silu(g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo)             # (E, C, d)
+    out_buf = shard_act(out_buf, "act_experts", None, None)
+
+    gathered = out_buf[scat_e, scat_c]                      # (T*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    unsorted = jnp.zeros((T * K, d), dt).at[sort_idx].set(gathered)
+    per_k = unsorted.reshape(T, K, d)
+    return jnp.einsum("tkd,tk->td", per_k, gate.astype(dt))
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d), aux load-balance loss.
+
+    Baseline path: one GLOBAL sort/scatter over all T tokens — simple,
+    but the token->expert resharding crosses the whole mesh (the
+    collective-bound term in §Roofline for the MoE giants).
+
+    Grouped path (cfg.moe_grouped_dispatch — beyond-paper §Perf
+    optimization): tokens are dispatched within ``moe_groups`` groups
+    aligned with the data-parallel shards, so argsort/scatter/gather
+    stay shard-local and only the (G, E, C/G, d) buffer crosses the
+    data->model boundary for expert compute — the hierarchical
+    dispatch used by production MoE frameworks, adapted to XLA SPMD.
+    """
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    gate, expert_idx, aux = _route(p, xt, cfg)
+
+    C = expert_capacity(cfg, T)
+    if cfg.moe_grouped_dispatch and T % cfg.moe_groups == 0 and \
+            T >= cfg.moe_groups * cfg.n_experts:
+        G = cfg.moe_groups
+        Cg = max(8, ((C // G + 7) // 8) * 8)
+        xg = xt.reshape(G, T // G, d)
+        gg = gate.reshape(G, T // G, -1)
+        eg = expert_idx.reshape(G, T // G, -1)
+        xg = shard_act(xg, "batch", None, None)   # groups ride the data axis
+        y = jax.vmap(
+            lambda xi, gi, ei: _dispatch_compute_combine(p, xi, gi, ei, Cg, cfg)
+        )(xg, gg, eg)
+        y = y.reshape(T, d)
+    else:
+        y = _dispatch_compute_combine(p, xt, gate, expert_idx, C, cfg)
+
+    if "shared_expert" in p:
+        y = y + apply_mlp(p["shared_expert"], xt, cfg)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,201 @@
+"""Mamba2 / SSD block (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of length ``cfg.ssm_chunk`` + a linear recurrence
+over chunk states — the TPU-friendly formulation (dense MXU matmuls per
+chunk, one small scan across chunks). Decode is the O(1) recurrent
+update: this is why the ssm/hybrid archs run long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, dense_init
+from repro.sharding import shard_act
+
+# group count for B/C projections (mamba2 default 1 in small models)
+G = 1
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.d_inner
+    H = cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * G * N
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    return d_inner, H, P, N, conv_dim, d_in_proj
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, P, N, conv_dim, d_in_proj = _dims(cfg)
+    pd = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype=pd),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), in_axis=0, dtype=pd),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "D": jnp.ones((H,), pd),
+        "norm_scale": jnp.ones((d_inner,), pd),
+        "out_proj": dense_init(ks[3], (d_inner, d), dtype=pd),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_inner, H, P, N, conv_dim, _ = _dims(cfg)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:d_inner + conv_dim]
+    dt = proj[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def _gated_norm(p, y, z, cfg: ModelConfig):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + cfg.norm_eps)
+    return y / rms * p["norm_scale"].astype(jnp.float32)
+
+
+def apply_ssm(p, x, cfg: ModelConfig, initial_state=None,
+              initial_conv=None, return_carry=False):
+    """Chunked SSD forward. x: (B, S, d) with S % ssm_chunk == 0.
+
+    Returns (y (B,S,d), final_state (B,H,P,N)); with ``return_carry``
+    the second element is (final_state, conv_frames (B,w-1,conv_dim)) —
+    together with ``initial_state``/``initial_conv`` this makes chunked
+    prefill exactly equivalent to processing the whole sequence
+    (tests/test_properties.py::test_ssd_is_causal_and_state_consistent).
+    """
+    Bsz, S, d = x.shape
+    d_inner, H, P, N, conv_dim, _ = _dims(cfg)
+    L = min(cfg.ssm_chunk, S)
+    if S % L:
+        raise ValueError(f"seq {S} not divisible by ssm_chunk {L}")
+    nc = S // L
+    dt_ = x.dtype
+
+    proj = x @ p["in_proj"].astype(dt_)                     # (B,S,d_in_proj)
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+
+    # causal depthwise conv over (x,B,C) channels; boundary frames come
+    # from the previous chunk's carry when prefilling in pieces
+    w = cfg.ssm_conv_width
+    if initial_conv is None:
+        initial_conv = jnp.zeros((Bsz, w - 1, conv_dim), dt_)
+    pad = jnp.concatenate([initial_conv.astype(dt_), xBC], axis=1)
+    final_conv = pad[:, -(w - 1):, :] if w > 1 else initial_conv
+    conv = sum(pad[:, i:i + S, :] * p["conv_w"][i].astype(dt_) for i in range(w))
+    xBC = jax.nn.silu(conv + p["conv_b"].astype(dt_))
+
+    xs = xBC[..., :d_inner].reshape(Bsz, S, H, P)
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(Bsz, S, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(Bsz, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,) negative
+    dA = dt * A                                              # (B,S,H) log-decay
+
+    # --- chunk views ---
+    xs_c = xs.reshape(Bsz, nc, L, H, P).astype(jnp.float32)
+    B_c = Bm.reshape(Bsz, nc, L, G, N).astype(jnp.float32)
+    C_c = Cm.reshape(Bsz, nc, L, G, N).astype(jnp.float32)
+    dt_c = dt.reshape(Bsz, nc, L, H)
+    dA_c = dA.reshape(Bsz, nc, L, H)
+    cum = jnp.cumsum(dA_c, axis=2)                           # (B,nc,L,H)
+
+    # --- intra-chunk (attention-like, causal) ---
+    # decay[t,s] = exp(cum[t]-cum[s]), t>=s. Mask BEFORE the exp: for
+    # t<s rel is positive and exp overflows, and where(mask, inf, 0)
+    # produces NaN gradients (0 * inf) in the backward pass.
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, rel, -1e30))
+    cb = jnp.einsum("bclgn,bcsgn->bcls", C_c, B_c)           # (B,nc,L,L) (G=1)
+    scores = cb[..., None] * decay * dt_c[:, :, None, :, :]  # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores, xs_c)
+
+    # --- chunk states ---
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                   # decay to chunk end
+    weighted = xs_c * (seg * dt_c)[..., None]                # (B,nc,L,H,P)
+    states = jnp.einsum("bclgn,bclhp->bchpn", B_c, weighted)  # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def scan_fn(carry, inp):
+        s_c, dec = inp                                       # (B,H,P,N), (B,H)
+        prev = carry
+        new = dec[:, :, None, None] * prev + s_c
+        return new, prev                                     # emit state *before* chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)                    # (nc,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                # (nc,B,H)
+    final_state, prev_states = jax.lax.scan(scan_fn, initial_state.astype(jnp.float32),
+                                            (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,H,P,N)
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)                                  # decay from chunk start
+    y_inter = jnp.einsum("bclgn,bchpn->bclhp", C_c, prev_states) * \
+        in_decay[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    y = _gated_norm(p, y, z, cfg)
+    y = shard_act(y, "batch", "seq", "act_heads")
+    out = y.astype(dt_) @ p["out_proj"].astype(dt_)
+    if return_carry:
+        return out, (final_state, final_conv)
+    return out, final_state
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    d_inner, H, P, N, conv_dim, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), _dtype(cfg.dtype)),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def apply_ssm_decode(p, x, cache, cfg: ModelConfig):
+    """One-token recurrent step. x: (B, 1, d)."""
+    Bsz = x.shape[0]
+    d_inner, H, P, N, conv_dim, _ = _dims(cfg)
+    dt_ = x.dtype
+
+    proj = x[:, 0, :] @ p["in_proj"].astype(dt_)             # (B, d_in_proj)
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+
+    # conv ring: shift in the new frame
+    frames = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,w,conv)
+    conv = jnp.einsum("bwc,wc->bc", frames, p["conv_w"].astype(dt_))
+    xBC = jax.nn.silu(conv + p["conv_b"].astype(dt_))
+    new_conv = frames[:, 1:, :]
+
+    xh = xBC[:, :d_inner].reshape(Bsz, H, P).astype(jnp.float32)
+    Bm = xBC[:, d_inner:d_inner + G * N].reshape(Bsz, G, N).astype(jnp.float32)
+    Cm = xBC[:, d_inner + G * N:].reshape(Bsz, G, N).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * A)                                    # (B,H)
+
+    outer = jnp.einsum("bgn,bhp->bhpn", Bm, xh * dt[..., None])
+    state = dec[:, :, None, None] * cache["state"] + outer
+    y = jnp.einsum("bgn,bhpn->bhp", Cm, state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, d_inner)
+    y = _gated_norm(p, y, z, cfg)
+    out = y.astype(dt_) @ p["out_proj"].astype(dt_)
+    return out[:, None, :], {"conv": new_conv, "state": state}

@@ -1,0 +1,438 @@
+"""Model assembly for every assigned architecture family.
+
+Families:
+  dense   — [attn + MLP] x L                       (granite, command-r, deepseek)
+  moe     — [attn + MoE] with dense interleave      (kimi-k2, llama4)
+  ssm     — [Mamba2/SSD] x L                        (mamba2-370m)
+  hybrid  — Mamba2 backbone + ONE shared attention
+            block applied every ``attn_every`` layers (zamba2)
+  encdec  — whisper: bidirectional encoder + causal decoder w/ cross-attn
+  vlm     — internvl: stub patch embeddings prepended to the token stream
+
+Deep homogeneous stacks are scanned (``cfg.scan_layers``) with stacked
+parameter pytrees — essential to keep 95-layer lower/compile tractable —
+and support jax.checkpoint remat policies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    _dtype,
+    apply_embedding,
+    apply_mlp,
+    apply_norm,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    logits_from_embedding,
+    dense_init,
+    sinusoidal_positions,
+)
+from repro.models.moe import apply_moe, init_moe
+from repro.sharding import shard_act
+
+# ---------------------------------------------------------------------------
+# layer plan
+
+
+def layer_kinds(cfg: ModelConfig):
+    """Per-layer block kind list."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            kinds.append("ssm")
+        elif cfg.family == "hybrid":
+            # mamba block everywhere; shared attention applied after every
+            # ``attn_every``-th layer (weights shared — the zamba2 trick)
+            kinds.append("ssm")
+        elif cfg.family == "moe":
+            if i < cfg.n_dense_layers or (cfg.moe_every > 1 and i % cfg.moe_every == 0):
+                kinds.append("dense")
+            else:
+                kinds.append("moe")
+        else:
+            kinds.append("dense")
+    return kinds
+
+
+# ---------------------------------------------------------------------------
+# single block
+
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ssm_norm": init_norm(cfg, cfg.d_model),
+                "ssm": ssm_lib.init_ssm(ks[0], cfg)}
+    p = {
+        "attn_norm": init_norm(cfg, cfg.d_model),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+        "mlp_norm": init_norm(cfg, cfg.d_model),
+    }
+    if kind == "moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    if kind == "ssm":
+        return ssm_lib.init_ssm_cache(cfg, batch)
+    return attn_lib.init_kv_cache(cfg, batch, max_seq)
+
+
+def apply_block(p, x, cfg: ModelConfig, kind: str, *, positions=None,
+                cache=None, pos=None, sliding_window=0):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = apply_norm(p["ssm_norm"], x, cfg)
+        if cache is None:
+            out, _ = ssm_lib.apply_ssm(p["ssm"], h, cfg)
+            new_cache = None
+        else:
+            out, new_cache = ssm_lib.apply_ssm_decode(p["ssm"], h, cache, cfg)
+        return x + out, new_cache, aux
+
+    h = apply_norm(p["attn_norm"], x, cfg)
+    if cache is None:
+        a = attn_lib.attend_full(p["attn"], h, cfg, positions=positions,
+                                 causal=True, sliding_window=sliding_window)
+        new_cache = None
+    else:
+        a, new_cache = attn_lib.attend_decode(p["attn"], h, cache, pos, cfg,
+                                              sliding_window=sliding_window)
+    x = x + a
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    if kind == "moe":
+        m, aux = apply_moe(p["moe"], h, cfg)
+    else:
+        m = apply_mlp(p["mlp"], h, cfg)
+    return x + m, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM (dense / moe / ssm / hybrid / vlm)
+
+
+def init_lm(key, cfg: ModelConfig):
+    kinds = layer_kinds(cfg)
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    params: Dict[str, Any] = {
+        "embedding": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, cfg),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                             dtype=_dtype(cfg.param_dtype))}
+    if cfg.family == "hybrid":
+        params["shared_attn"] = {
+            "attn_norm": init_norm(cfg, cfg.d_model),
+            "attn": attn_lib.init_attention(ks[2], cfg),
+            "mlp_norm": init_norm(cfg, cfg.d_model),
+            "mlp": init_mlp(ks[3], cfg),
+        }
+    if cfg.scan_layers and _scannable(cfg):
+        params["layers"] = _init_scanned(ks[4:], cfg, kinds)
+    else:
+        params["blocks"] = [init_block(ks[4 + i], cfg, kinds[i])
+                            for i in range(cfg.n_layers)]
+    return params
+
+
+def _scannable(cfg: ModelConfig) -> bool:
+    """Scan homogeneous (or fixed-period) decoder stacks."""
+    return cfg.family in ("dense", "moe", "vlm")
+
+
+def _scan_plan(cfg: ModelConfig):
+    """(prefix_kinds, period_kinds, n_periods): leading unscanned layers
+    (e.g. kimi's dense layer 0) + a repeating scanned period."""
+    kinds = layer_kinds(cfg)
+    prefix = kinds[: cfg.n_dense_layers]
+    body = kinds[cfg.n_dense_layers:]
+    period = max(cfg.moe_every, 1) if cfg.family == "moe" else 1
+    if len(body) % period:
+        extra = len(body) % period
+        prefix = prefix + body[:extra]
+        body = body[extra:]
+    period_kinds = body[:period]
+    return prefix, period_kinds, len(body) // period
+
+
+def _init_scanned(keys, cfg: ModelConfig, kinds):
+    prefix, period_kinds, n_periods = _scan_plan(cfg)
+    out: Dict[str, Any] = {"prefix": [init_block(keys[i], cfg, prefix[i])
+                                      for i in range(len(prefix))]}
+    base = len(prefix)
+    for j, kind in enumerate(period_kinds):
+        ks = jax.random.split(keys[base + j], n_periods)
+        stacked = jax.vmap(lambda k: init_block(k, cfg, kind))(ks)
+        out[f"period{j}"] = stacked
+    return out
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _forward_layers(params, x, cfg: ModelConfig, *, positions):
+    """Train/prefill pass through the decoder stack.
+    Returns (x, total_aux)."""
+    kinds = layer_kinds(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    sw = cfg.sliding_window
+
+    if "blocks" in params:
+        def run_block(p, h, kind):
+            y, _, aux = apply_block(p, h, cfg, kind, positions=positions,
+                                    sliding_window=sw)
+            return y, aux
+
+        for i, p in enumerate(params["blocks"]):
+            fn = _maybe_remat(
+                lambda p_, h_, kind=kinds[i]: run_block(p_, h_, kind), cfg)
+            x, aux = fn(p, x)
+            aux_total = aux_total + aux
+            if cfg.family == "hybrid" and cfg.attn_every and \
+                    (i + 1) % cfg.attn_every == 0:
+                fn = _maybe_remat(
+                    lambda p_, h_: run_block(p_, h_, "dense"), cfg)
+                x, _ = fn(params["shared_attn"], x)
+        return x, aux_total
+
+    # scanned
+    lp = params["layers"]
+    prefix, period_kinds, n_periods = _scan_plan(cfg)
+    for i, p in enumerate(lp["prefix"]):
+        x, _, aux = apply_block(p, x, cfg, prefix[i], positions=positions,
+                                sliding_window=sw)
+        aux_total = aux_total + aux
+
+    def body(carry, stacked):
+        h, aux_acc = carry
+        for j, kind in enumerate(period_kinds):
+            h, _, aux = apply_block(stacked[f"period{j}"], h, cfg, kind,
+                                    positions=positions, sliding_window=sw)
+            aux_acc = aux_acc + aux
+        return (h, aux_acc), None
+
+    body = _maybe_remat(body, cfg)
+    stacked_xs = {k: v for k, v in lp.items() if k.startswith("period")}
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked_xs)
+    return x, aux_total
+
+
+def _decode_layers(params, x, caches, pos, cfg: ModelConfig):
+    kinds = layer_kinds(cfg)
+    sw = cfg.sliding_window
+
+    if "blocks" in params:
+        new_caches = []
+        ci = 0
+        for i, p in enumerate(params["blocks"]):
+            x, nc, _ = apply_block(p, x, cfg, kinds[i], cache=caches[ci], pos=pos,
+                                   sliding_window=sw)
+            new_caches.append(nc)
+            ci += 1
+            if cfg.family == "hybrid" and cfg.attn_every and \
+                    (i + 1) % cfg.attn_every == 0:
+                x, nc2, _ = apply_block(params["shared_attn"], x, cfg, "dense",
+                                        cache=caches[ci], pos=pos,
+                                        sliding_window=cfg.sliding_window or 0)
+                new_caches.append(nc2)
+                ci += 1
+        return x, new_caches
+
+    lp = params["layers"]
+    prefix, period_kinds, n_periods = _scan_plan(cfg)
+    new_prefix = []
+    for i, p in enumerate(lp["prefix"]):
+        x, nc, _ = apply_block(p, x, cfg, prefix[i], cache=caches["prefix"][i],
+                               pos=pos, sliding_window=sw)
+        new_prefix.append(nc)
+
+    def body(h, xs):
+        stacked, cache = xs
+        ncs = {}
+        for j, kind in enumerate(period_kinds):
+            h, nc, _ = apply_block(stacked[f"period{j}"], h, cfg, kind,
+                                   cache=cache[f"period{j}"], pos=pos,
+                                   sliding_window=sw)
+            ncs[f"period{j}"] = nc
+        return h, ncs
+
+    stacked_xs = {k: v for k, v in lp.items() if k.startswith("period")}
+    x, new_stacked = jax.lax.scan(body, x, (stacked_xs, caches["body"]))
+    return x, {"prefix": new_prefix, "body": new_stacked}
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    kinds = layer_kinds(cfg)
+    if cfg.scan_layers and _scannable(cfg):
+        prefix, period_kinds, n_periods = _scan_plan(cfg)
+        body = {}
+        for j, kind in enumerate(period_kinds):
+            one = block_cache(cfg, kind, batch, max_seq)
+            body[f"period{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), one)
+        return {"prefix": [block_cache(cfg, prefix[i], batch, max_seq)
+                           for i in range(len(prefix))],
+                "body": body}
+    caches = []
+    for i, kind in enumerate(kinds):
+        caches.append(block_cache(cfg, kind, batch, max_seq))
+        if cfg.family == "hybrid" and cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+            caches.append(block_cache(cfg, "dense", batch, max_seq))
+    return caches
+
+
+def _readout(params, x, cfg: ModelConfig):
+    x = apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = logits_from_embedding(params["embedding"], x)
+    else:
+        logits = x @ params["lm_head"]["w"].astype(x.dtype)
+    return shard_act(logits, *(("batch",) + ("seq",) * (logits.ndim - 2) + ("act_mlp",)))
+
+
+def lm_forward(params, batch, cfg: ModelConfig):
+    """Train/prefill forward. batch: {"tokens": (B,S)[, "vision_embed"]}.
+    Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    x = apply_embedding(params["embedding"], tokens, cfg)
+    if cfg.family == "vlm":
+        ve = batch["vision_embed"].astype(x.dtype)          # (B, n_vis, d)
+        x = jnp.concatenate([ve, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = shard_act(x, "batch", "seq", "embed")
+    x, aux = _forward_layers(params, x, cfg, positions=positions)
+    logits = _readout(params, x, cfg)
+    if cfg.family == "vlm":
+        logits = logits[:, batch["vision_embed"].shape[1]:, :]
+    return logits, aux
+
+
+def lm_decode_step(params, tokens, caches, pos, cfg: ModelConfig):
+    """tokens: (B,1) int32; pos: () int32. Returns (logits (B,1,V), caches)."""
+    x = apply_embedding(params["embedding"], tokens, cfg)
+    x = shard_act(x, "batch", "seq", "embed")
+    x, new_caches = _decode_layers(params, x, caches, pos, cfg)
+    return _readout(params, x, cfg), new_caches
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, cfg.n_encoder_layers + cfg.n_layers + 3)
+    enc_blocks = [init_block(ks[i], cfg, "dense")
+                  for i in range(cfg.n_encoder_layers)]
+    dec_blocks = []
+    base = cfg.n_encoder_layers
+    for i in range(cfg.n_layers):
+        kb = jax.random.split(ks[base + i], 2)
+        b = init_block(kb[0], cfg, "dense")
+        b["cross_norm"] = init_norm(cfg, cfg.d_model)
+        b["cross_attn"] = attn_lib.init_attention(kb[1], cfg)
+        dec_blocks.append(b)
+    return {
+        "embedding": init_embedding(ks[-2], cfg.padded_vocab, cfg.d_model, cfg),
+        "enc_final_norm": init_norm(cfg, cfg.d_model),
+        "final_norm": init_norm(cfg, cfg.d_model),
+        "encoder": enc_blocks,
+        "decoder": dec_blocks,
+        "lm_head": {"w": dense_init(ks[-1], (cfg.d_model, cfg.padded_vocab),
+                                    dtype=_dtype(cfg.param_dtype))},
+    }
+
+
+def encdec_encode(params, audio_embed, cfg: ModelConfig):
+    """audio_embed: (B, S_enc, d) — the mandated frontend stub output."""
+    B, S, d = audio_embed.shape
+    x = audio_embed.astype(_dtype(cfg.dtype)) + \
+        sinusoidal_positions(S, d).astype(_dtype(cfg.dtype))[None]
+    x = shard_act(x, "batch", "seq", "embed")
+    for p in params["encoder"]:
+        h = apply_norm(p["attn_norm"], x, cfg)
+        x = x + attn_lib.attend_full(p["attn"], h, cfg, causal=False)
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def encdec_forward(params, batch, cfg: ModelConfig):
+    """batch: {"audio_embed": (B,S_enc,d), "tokens": (B,S_dec)}."""
+    enc = encdec_encode(params, batch["audio_embed"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = apply_embedding(params["embedding"], tokens, cfg)
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    for p in params["decoder"]:
+        h = apply_norm(p["attn_norm"], x, cfg)
+        x = x + attn_lib.attend_full(p["attn"], h, cfg, positions=positions,
+                                     causal=True)
+        h = apply_norm(p["cross_norm"], x, cfg)
+        x = x + attn_lib.attend_full(p["cross_attn"], h, cfg, x_kv=enc,
+                                     causal=False)
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x @ params["lm_head"]["w"].astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Self-attn KV per decoder layer + precomputed cross K/V."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = _dtype(cfg.dtype)
+    return {
+        "self": [attn_lib.init_kv_cache(cfg, batch, max_seq)
+                 for _ in range(cfg.n_layers)],
+        "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, KV, hd), dt),
+        "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, KV, hd), dt),
+    }
+
+
+def encdec_decode_step(params, tokens, caches, pos, cfg: ModelConfig):
+    B = tokens.shape[0]
+    x = apply_embedding(params["embedding"], tokens, cfg)
+    # sinusoidal positional term at position ``pos``
+    d = cfg.d_model
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10_000.0 ** (2 * dim / d))
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+    x = x + pe.astype(x.dtype)
+    new_self = []
+    for i, p in enumerate(params["decoder"]):
+        h = apply_norm(p["attn_norm"], x, cfg)
+        a, nc = attn_lib.attend_decode(p["attn"], h, caches["self"][i], pos, cfg)
+        x = x + a
+        new_self.append(nc)
+        # cross attention against precomputed encoder K/V
+        h = apply_norm(p["cross_norm"], x, cfg)
+        ck, cv = caches["cross_k"][i], caches["cross_v"][i]
+        a, _ = attn_lib.attend_decode(
+            p["cross_attn"], h, {"k": ck, "v": cv},
+            jnp.asarray(cfg.encoder_seq - 1, jnp.int32), cfg, update_cache=False)
+        x = x + a
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x @ params["lm_head"]["w"].astype(x.dtype)
+    return logits, {**caches, "self": new_self}

@@ -1,0 +1,169 @@
+"""Hand-rolled optimizers (optax is not available in this environment).
+
+All optimizers share one interface::
+
+    opt = make_optimizer(OptimizerConfig(...))
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params, lr)
+
+State is a plain pytree so it shards with the same logical-axis rules as
+the parameters (critical for the ≥100B dry-runs). Adafactor keeps
+factored second moments so the 1T-param config's optimizer state is
+O(rows+cols) per matrix instead of O(rows*cols).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.utils.tree import tree_global_norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable                 # (grads, state, params, lr) -> (params, state)
+
+
+def _clip_by_global_norm(grads, max_norm):
+    if max_norm <= 0:
+        return grads
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "sgd":
+        return _sgd(cfg)
+    if cfg.name == "momentum":
+        return _momentum(cfg)
+    if cfg.name in ("adam", "adamw"):
+        return _adam(cfg, decoupled_wd=(cfg.name == "adamw"))
+    if cfg.name == "adafactor":
+        return _adafactor(cfg)
+    raise ValueError(f"unknown optimizer '{cfg.name}'")
+
+
+# ---------------------------------------------------------------------------
+
+def _sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        grads = _clip_by_global_norm(grads, cfg.grad_clip)
+        new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new_params, {"step": state["step"] + 1}
+
+    return Optimizer("sgd", init, update)
+
+
+def _momentum(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=cfg.state_dtype), params),
+        }
+
+    def update(grads, state, params, lr):
+        grads = _clip_by_global_norm(grads, cfg.grad_clip)
+        mu = jax.tree.map(
+            lambda m, g: cfg.momentum * m + g.astype(m.dtype), state["mu"], grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
+        return new_params, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer("momentum", init, update)
+
+
+def _adam(cfg: OptimizerConfig, decoupled_wd: bool) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=cfg.state_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+        }
+
+    def update(grads, state, params, lr):
+        grads = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+        m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g.astype(m_.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * jnp.square(g.astype(v_.dtype)),
+                         state["v"], grads)
+
+        def step_fn(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+            if decoupled_wd and cfg.weight_decay > 0:
+                upd = upd + cfg.weight_decay * p.astype(upd.dtype)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step_fn, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer("adamw" if decoupled_wd else "adam", init, update)
+
+
+def _adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), the
+    standard choice for ≥100B training. No first moment (momentum-free),
+    row/col factored v for rank>=2 leaves."""
+    eps2 = 1e-30
+
+    def init(params):
+        def leaf_state(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], dtype=jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dtype=jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(leaf_state, params, is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, lr):
+        grads = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** -0.8       # standard adafactor decay schedule
+
+        def leaf_update(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps2
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps2)
+                precond = (vr[..., :, None] / denom[..., :, None]) * vc[..., None, :]
+                upd = g / (jnp.sqrt(precond) + cfg.eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g / (jnp.sqrt(v) + cfg.eps)
+                new_s = {"v": v}
+            # update clipping (RMS<=1), as in the paper
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps2)
+            upd = upd / jnp.maximum(1.0, rms)
+            if cfg.weight_decay > 0:
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["v"])
+        out = [leaf_update(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return new_params, {"step": step, "v": new_v}
+
+    return Optimizer("adafactor", init, update)

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(name: str, base_lr: float, *, warmup: int = 0,
+                  total_steps: int = 0, min_ratio: float = 0.1):
+    if name == "constant":
+        def sched(step):
+            if warmup > 0:
+                return base_lr * jnp.minimum(1.0, (step + 1) / warmup)
+            return jnp.asarray(base_lr)
+        return sched
+    if name == "cosine":
+        if total_steps <= 0:
+            raise ValueError("cosine schedule needs total_steps")
+
+        def sched(step):
+            warm = jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+            prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+            cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+            return base_lr * warm * cos
+        return sched
+    raise ValueError(f"unknown schedule '{name}'")

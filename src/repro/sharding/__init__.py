@@ -1,0 +1,9 @@
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    build_param_specs,
+    logical_axes_for_path,
+    shard_act,
+    spec_for,
+    use_sharding,
+)

@@ -1,0 +1,238 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code never mentions mesh axes. Parameters are given *logical*
+axes derived from their tree path + shape; activations are annotated
+with :func:`shard_act`. A rule table maps logical axes to physical mesh
+axes, with automatic divisibility fallback (an axis that does not divide
+the mesh size is left unsharded rather than failing to lower).
+
+Physical mesh axes:
+  pod    — outer swarm-client / pure-DP axis (multi-pod only)
+  data   — batch / FSDP axis
+  model  — tensor-parallel axis
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical-axis rule table
+# ---------------------------------------------------------------------------
+
+#: logical axis -> tuple of mesh axes (tried in order, divisibility-checked)
+DEFAULT_LOGICAL_TO_PHYSICAL = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),
+    "cache_seq": ("data", "model"),   # distributed KV cache (decode); for
+                                      # B=1 long_500k batch frees "data" and
+                                      # the cache shards 256-way over seq
+    "embed": (),                       # activation embed dim stays local
+    "act_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_experts": ("model",),
+    # parameters
+    "p_embed": ("data", "pod"),        # FSDP axes for weights (512-way with pods)
+    "p_mlp": ("model",),
+    "p_heads": ("model",),
+    "p_kv": ("model",),
+    "p_vocab": ("model",),
+    "p_experts": ("model",),
+    "p_state": (),
+    "p_conv": (),
+    "layers": (),                      # scanned-layer leading axis
+    "clients": ("pod",),               # swarm client axis (fleet regime)
+}
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    logical_to_physical: dict = field(default_factory=lambda: dict(DEFAULT_LOGICAL_TO_PHYSICAL))
+
+    def physical(self, logical: Optional[str], mesh: Mesh, dim_size: int,
+                 taken: set) -> Optional[tuple]:
+        """Resolve one logical axis to mesh axes, respecting divisibility
+        and never assigning the same mesh axis twice within one spec."""
+        if logical is None:
+            return None
+        candidates = self.logical_to_physical.get(logical, ())
+        chosen = []
+        prod = 1
+        for ax in candidates:
+            if ax in taken or ax not in mesh.shape:
+                continue
+            n = mesh.shape[ax]
+            if dim_size % (prod * n) == 0:
+                chosen.append(ax)
+                prod *= n
+        if not chosen:
+            return None
+        for ax in chosen:
+            taken.add(ax)
+        return tuple(chosen)
+
+
+DEFAULT_RULES = AxisRules()
+
+# ---------------------------------------------------------------------------
+# Parameter path -> logical axes
+# ---------------------------------------------------------------------------
+
+# Longest-suffix match on the parameter path. Order matters: first hit wins.
+_PARAM_PATH_RULES = [
+    # embeddings / heads
+    (r"embedding/table$",            ("p_vocab", "p_embed")),
+    (r"pos_embedding/table$",        (None, "p_embed")),
+    (r"lm_head/w$",                  ("p_embed", "p_vocab")),
+    # attention
+    (r"attn.*/wq$",                  ("p_embed", "p_heads")),
+    (r"attn.*/wk$",                  ("p_embed", "p_kv")),
+    (r"attn.*/wv$",                  ("p_embed", "p_kv")),
+    (r"attn.*/wo$",                  ("p_heads", "p_embed")),
+    (r"attn.*/(bq|bk|bv)$",          ("p_heads",)),
+    (r"attn.*/bo$",                  ("p_embed",)),
+    # dense mlp
+    (r"mlp/wi$",                     ("p_embed", "p_mlp")),
+    (r"mlp/wg$",                     ("p_embed", "p_mlp")),
+    (r"mlp/wo$",                     ("p_mlp", "p_embed")),
+    (r"mlp/(bi|bg)$",                ("p_mlp",)),
+    (r"mlp/bo$",                     ("p_embed",)),
+    # moe
+    (r"router/w$",                   ("p_embed", "p_experts")),
+    (r"router/b$",                   ("p_experts",)),
+    (r"experts/wi$",                 ("p_experts", "p_embed", "p_mlp")),
+    (r"experts/wg$",                 ("p_experts", "p_embed", "p_mlp")),
+    (r"experts/wo$",                 ("p_experts", "p_mlp", "p_embed")),
+    (r"shared_expert/wi$",           ("p_embed", "p_mlp")),
+    (r"shared_expert/wg$",           ("p_embed", "p_mlp")),
+    (r"shared_expert/wo$",           ("p_mlp", "p_embed")),
+    # mamba2 / ssm
+    (r"ssm/in_proj$",                ("p_embed", "p_heads")),
+    (r"ssm/out_proj$",               ("p_heads", "p_embed")),
+    (r"ssm/conv_w$",                 ("p_conv", "p_heads")),
+    (r"ssm/conv_b$",                 ("p_heads",)),
+    (r"ssm/(A_log|dt_bias|D)$",      ("p_heads",)),
+    (r"ssm/norm_scale$",             ("p_heads",)),
+    # decode caches
+    (r"(^|/)(k|v)$",                 ("batch", "cache_seq", "p_kv", None)),
+    (r"cross_(k|v)$",                (None, "batch", None, "p_kv", None)),
+    (r"(^|/)conv$",                  ("batch", None, "p_heads")),
+    (r"(^|/)state$",                 ("batch", "p_heads", None, None)),
+    # norms / scalars
+    (r"(scale|bias)$",               (None,)),
+    # cnn (tiny models — replicate)
+    (r"conv\d*/w$",                  (None, None, None, None)),
+    (r"conv\d*/b$",                  (None,)),
+    (r"fc\d*/w$",                    ("p_embed", None)),
+    (r"fc\d*/b$",                    (None,)),
+]
+
+
+def logical_axes_for_path(path: str, ndim: int) -> tuple:
+    """Map a parameter path to its logical axes.
+
+    Handles the stacked-layer case: if the matched rule has one fewer
+    axis than the array rank, a leading "layers" axis is assumed.
+    Adafactor's factored states (…/vr = parent minus last dim,
+    …/vc = parent minus second-to-last) inherit the parent weight's axes.
+    """
+    if path.endswith("/vr"):
+        parent = logical_axes_for_path(path[:-3], ndim + 1)
+        return parent[:-1]
+    if path.endswith("/vc"):
+        parent = logical_axes_for_path(path[:-3], ndim + 1)
+        return parent[:-2] + parent[-1:]
+    for pat, axes in _PARAM_PATH_RULES:
+        if re.search(pat, path):
+            if len(axes) == ndim:
+                return axes
+            if len(axes) == ndim - 1:
+                return ("layers",) + axes
+            # rank mismatch (e.g. fused projections): replicate
+            return (None,) * ndim
+    return (None,) * ndim
+
+
+def spec_for(logical_axes: tuple, mesh: Mesh, shape: tuple,
+             rules: AxisRules = DEFAULT_RULES) -> P:
+    """Build a PartitionSpec from logical axes, with divisibility checks."""
+    taken: set = set()
+    parts = []
+    for logical, dim in zip(logical_axes, shape):
+        phys = rules.physical(logical, mesh, dim, taken)
+        if phys is None:
+            parts.append(None)
+        elif len(phys) == 1:
+            parts.append(phys[0])
+        else:
+            parts.append(phys)
+    return P(*parts)
+
+
+def build_param_specs(params, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Pytree of PartitionSpec mirroring ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(_key_name(k) for k in path)
+        axes = logical_axes_for_path(pstr, leaf.ndim)
+        specs.append(spec_for(axes, mesh, leaf.shape, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def build_param_shardings(params, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        build_param_specs(params, mesh, rules))
+
+
+def _key_name(k):
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context
+# ---------------------------------------------------------------------------
+
+class _ShardingCtx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: AxisRules = DEFAULT_RULES
+
+
+_CTX = _ShardingCtx()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: AxisRules = DEFAULT_RULES):
+    """Activate activation-sharding constraints for model code traced
+    inside this context. Without it, :func:`shard_act` is a no-op (the
+    CPU sim regime)."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def shard_act(x, *logical_axes):
+    """with_sharding_constraint by logical axis names; no-op outside
+    a use_sharding() context."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"shard_act: {len(logical_axes)} axes for rank-{x.ndim} array")
+    spec = spec_for(logical_axes, mesh, x.shape, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,1 @@
+from repro.train.steps import make_eval_step, make_serve_step, make_train_step  # noqa: F401

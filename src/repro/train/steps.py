@@ -1,0 +1,71 @@
+"""train_step / eval_step / serve_step factories.
+
+``make_train_step`` supports gradient accumulation over microbatches
+(lax.scan) — the activation-memory lever for the ≥100B dry-runs — and
+is the function the dry-run lowers with pjit in/out shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer
+from repro.utils.tree import tree_zeros_like
+
+
+def make_train_step(model: Model, opt: Optimizer, *, microbatches: int = 0):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if microbatches and microbatches > 1:
+        def train_step(params, opt_state, batch, lr):
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, mbatch):
+                g_acc, m_acc = acc
+                (loss, metrics), grads = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = tree_zeros_like(params)
+            # metrics accumulator with the right structure (no compute)
+            metrics_shape = jax.eval_shape(
+                lambda p, b: loss_fn(p, b)[1], params, jax.tree.map(lambda x: x[0], mb))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), metrics_shape)
+            (grads, msum), _ = jax.lax.scan(body, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, msum)
+            new_params, new_opt = opt.update(grads, opt_state, params, lr)
+            return new_params, new_opt, metrics
+    else:
+        def train_step(params, opt_state, batch, lr):
+            (loss, metrics), grads = grad_fn(params, batch)
+            new_params, new_opt = opt.update(grads, opt_state, params, lr)
+            return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch)
+        return metrics
+    return eval_step
+
+
+def make_serve_step(model: Model, *, sample: str = "greedy"):
+    """One decode iteration: logits for the new token + updated cache +
+    the greedy next token. This is what decode_32k / long_500k lower."""
+    def serve_step(params, tokens, cache, pos):
+        logits, new_cache = model.decode_step(params, tokens, cache, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+    return serve_step

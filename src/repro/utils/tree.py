@@ -1,0 +1,101 @@
+"""Pytree utilities shared across the framework.
+
+These are deliberately dependency-free (no optax / chex in this
+environment); every optimizer and the swarm aggregation layer build on
+them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i w_i * tree_i — the FedAvg primitive (paper Eq. 2).
+
+    ``trees`` is a list of pytrees with identical structure; ``weights``
+    is a 1-D array-like of the same length.
+    """
+    if len(trees) == 0:
+        raise ValueError("tree_weighted_sum needs at least one tree")
+    weights = jnp.asarray(weights)
+
+    def _combine(*leaves):
+        acc = leaves[0] * weights[0]
+        for i in range(1, len(leaves)):
+            acc = acc + leaves[i] * weights[i]
+        return acc
+
+    return jax.tree.map(_combine, *trees)
+
+
+def tree_stack(trees):
+    """Stack a list of identical-structure pytrees along a new leading
+    (client) axis — the sim-regime swarm representation."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n):
+    """Inverse of tree_stack."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_index(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_num_params(tree):
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_size_bytes(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_paths_and_leaves(tree):
+    """List of ("a/b/c", leaf) pairs with stable ordering."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(("/".join(_key_str(k) for k in path), leaf))
+    return out
+
+
+def _key_str(k):
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)

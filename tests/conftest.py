@@ -1,0 +1,7 @@
+# NOTE: deliberately NO xla_force_host_platform_device_count here —
+# smoke tests and benches must see the single real CPU device; only
+# repro.launch.dryrun / swarm_fleet set the 512-device stand-in flag.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

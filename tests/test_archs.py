@@ -1,0 +1,131 @@
+"""Per-assigned-architecture smoke tests (deliverable f): a REDUCED
+same-family variant (<=2 layers, d_model<=128, <=4 experts) runs one
+forward + one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import OptimizerConfig
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+from repro.train.steps import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke_batch(cfg, B=2, S=24):
+    if cfg.family == "encdec":
+        S_dec = 12
+        return {
+            "audio_embed": jax.random.normal(KEY, (B, 32, cfg.d_model)) * 0.02,
+            "tokens": jax.random.randint(KEY, (B, S_dec), 0, cfg.vocab_size),
+            "labels": jax.random.randint(KEY, (B, S_dec), 0, cfg.vocab_size),
+        }, (B, S_dec, cfg.vocab_size)
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embed"] = jax.random.normal(
+            KEY, (B, cfg.n_vision_tokens, cfg.d_model)) * 0.02
+    return batch, (B, S, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).smoke()
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    model = build_model(cfg)
+    params = model.init(KEY)
+
+    batch, logits_shape = _smoke_batch(cfg)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == logits_shape, (logits.shape, logits_shape)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    opt = make_optimizer(OptimizerConfig(name="adamw", lr=1e-3))
+    state = opt.init(params)
+    step = make_train_step(model, opt)
+    new_params, _, metrics = step(params, state, batch, jnp.asarray(1e-3))
+    assert np.isfinite(float(metrics["loss"]))
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if a != "whisper-base"])
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cache = model.init_cache(2, 16)
+    logits, new_cache = model.decode_step(
+        params, jnp.ones((2, 1), jnp.int32), cache, jnp.asarray(3, jnp.int32))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+def test_whisper_decode_step():
+    cfg = get_config("whisper-base").smoke()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cache = model.init_cache(2, 16)
+    logits, _ = model.decode_step(params, jnp.ones((2, 1), jnp.int32), cache,
+                                  jnp.asarray(3, jnp.int32))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+
+
+def test_exact_assigned_configs():
+    """The full configs must match the assignment table exactly."""
+    expect = {
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+    }
+    for arch, (L, d, H, KV, ff, V) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == d
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+        assert cfg.d_ff == ff and cfg.vocab_size == V
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("mamba2-370m").ssm_state == 128
+    assert get_config("kimi-k2-1t-a32b").n_experts == 384
+    assert get_config("kimi-k2-1t-a32b").top_k == 8
+    assert get_config("llama4-maverick-400b-a17b").n_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").top_k == 1
+
+
+def test_param_counts_in_expected_range():
+    """Full-config parameter counts (eval_shape only, no allocation)
+    should land near each model card's nameplate."""
+    import math
+    expect = {
+        "granite-3-2b": (2e9, 4e9),
+        "command-r-35b": (30e9, 40e9),
+        "deepseek-67b": (60e9, 72e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.15e12),
+        "llama4-maverick-400b-a17b": (250e9, 450e9),
+        "mamba2-370m": (0.3e9, 0.45e9),
+        "deepseek-7b": (6e9, 8e9),
+        "internvl2-26b": (18e9, 26e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        assert lo <= n <= hi, f"{arch}: {n:,} not in [{lo:,.0f}, {hi:,.0f}]"

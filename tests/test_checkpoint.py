@@ -1,0 +1,41 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_into, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)},
+            "list": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    save_checkpoint(tmp_path / "ckpt", tree, step=42, extra={"note": "x"})
+    restored, step = restore_into(jax.tree.map(jnp.zeros_like, tree),
+                                  tmp_path / "ckpt")
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.ones((2, 2))}
+    save_checkpoint(tmp_path / "c", tree)
+    with pytest.raises(ValueError):
+        restore_into({"a": jnp.ones((3, 3))}, tmp_path / "c")
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_checkpoint(tmp_path / "c", {"a": jnp.ones((2,))})
+    with pytest.raises(KeyError):
+        restore_into({"a": jnp.ones((2,)), "b": jnp.ones((1,))}, tmp_path / "c")
+
+
+def test_swarm_stacked_checkpoint(tmp_path):
+    """Client-stacked pytrees (the swarm state) round-trip too."""
+    stacked = {"w": jnp.arange(12.0).reshape(3, 4)}
+    save_checkpoint(tmp_path / "swarm", stacked, step=7)
+    restored, step = restore_into(jax.tree.map(jnp.zeros_like, stacked),
+                                  tmp_path / "swarm")
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(stacked["w"]))

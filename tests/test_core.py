@@ -1,0 +1,160 @@
+"""BSO-SL core unit tests: distribution stats, k-means, brain storm,
+cluster aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import cluster_fedavg, fedavg
+from repro.core.bso import brain_storm
+from repro.core.diststats import (full_params_bytes, param_distribution,
+                                  upload_bytes)
+from repro.core.kmeans import assign, kmeans
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- diststats
+
+def test_param_distribution_deterministic_order():
+    p = {"b": jnp.ones((3, 3)), "a": jnp.zeros((5,)),
+         "c": {"x": jnp.full((2,), 2.0)}}
+    f1 = param_distribution(p)
+    f2 = param_distribution({"c": {"x": jnp.full((2,), 2.0)},
+                             "a": jnp.zeros((5,)), "b": jnp.ones((3, 3))})
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    # a: mean 0 var 0; b: mean 1 var 0; c/x: mean 2 var 0
+    np.testing.assert_allclose(np.asarray(f1),
+                               [0, 0, 1, 0, 2, 0], atol=1e-7)
+
+
+def test_upload_bytes_is_tiny_vs_full_params():
+    p = {"w1": jnp.zeros((256, 256)), "w2": jnp.zeros((1024,))}
+    assert upload_bytes(p) == 2 * 2 * 4
+    assert full_params_bytes(p) == (256 * 256 + 1024) * 4
+    assert upload_bytes(p) < full_params_bytes(p) / 1000
+
+
+# ------------------------------------------------------------------ kmeans
+
+def test_kmeans_separates_obvious_clusters():
+    a = jax.random.normal(KEY, (10, 4)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(1), (10, 4)) * 0.1 + 10.0
+    X = jnp.concatenate([a, b])
+    _, assignments = kmeans(KEY, X, 2, iters=10)
+    a_ids = set(np.asarray(assignments[:10]).tolist())
+    b_ids = set(np.asarray(assignments[10:]).tolist())
+    assert len(a_ids) == 1 and len(b_ids) == 1 and a_ids != b_ids
+
+
+def test_kmeans_assign_is_nearest():
+    X = jax.random.normal(KEY, (20, 3))
+    C = jax.random.normal(jax.random.PRNGKey(1), (4, 3))
+    a = assign(X, C)
+    d = jnp.sum((X[:, None, :] - C[None]) ** 2, axis=-1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(jnp.argmin(d, 1)))
+
+
+def test_kmeans_no_empty_clusters_with_enough_points():
+    X = jax.random.normal(KEY, (14, 6))
+    _, a = kmeans(KEY, X, 3, iters=30)
+    assert len(set(np.asarray(a).tolist())) == 3
+
+
+# -------------------------------------------------------------- brain storm
+
+def _plan(seed, p1, p2, val=None, assignments=None, k=3, n=14):
+    rng = np.random.default_rng(seed)
+    val = np.linspace(0, 1, n) if val is None else val
+    assignments = np.arange(n) % k if assignments is None else assignments
+    return brain_storm(rng, assignments, val, k, p1, p2)
+
+
+def test_centers_are_best_val_members_when_no_disruption():
+    # p1 = p2 = 1.0 => r > p never fires: pure center selection
+    plan = _plan(0, 1.0, 1.0)
+    for c in range(3):
+        members = np.where(plan.assignments == c)[0]
+        best = members[np.argmax(np.linspace(0, 1, 14)[members])]
+        assert plan.centers[c] == best
+    assert plan.events == []
+
+
+def test_replacement_fires_with_p1_zero():
+    plan = _plan(3, 0.0, 1.0)
+    # every cluster's center replaced by a random member (still a member)
+    for c in range(3):
+        members = set(np.where(plan.assignments == c)[0].tolist())
+        assert int(plan.centers[c]) in members
+
+
+def test_swap_exchanges_cluster_membership():
+    plan = _plan(5, 1.0, 0.0)   # swaps fire every cluster
+    assert any("swap" in e for e in plan.events)
+    # assignments remain a permutation-consistent partition of clients
+    assert sorted(np.unique(plan.assignments).tolist()) == [0, 1, 2] or \
+        len(np.unique(plan.assignments)) <= 3
+
+
+def test_paper_probabilities():
+    """p1=0.9/p2=0.8 with r>p trigger => ~10% / ~20% event rates."""
+    n_rep, n_swap = 0, 0
+    trials = 2000
+    for s in range(trials):
+        plan = _plan(s, 0.9, 0.8)
+        n_rep += sum("replace" in e for e in plan.events)
+        n_swap += sum("swap" in e for e in plan.events)
+    rep_rate = n_rep / (trials * 3)
+    swap_rate = n_swap / (trials * 3)
+    assert 0.05 < rep_rate < 0.15, rep_rate        # ~0.1 (minus no-op draws)
+    assert 0.10 < swap_rate < 0.30, swap_rate      # ~0.2
+    # swaps are pairwise: both clusters record one event jointly => the
+    # per-cluster *initiation* rate is what we bound
+
+
+# ------------------------------------------------------------- aggregation
+
+def _tree(x):
+    return {"w": jnp.asarray(x, jnp.float32), "b": jnp.asarray([x[0]], jnp.float32)}
+
+
+def test_fedavg_weighted_mean():
+    t1, t2 = _tree([1.0, 2.0]), _tree([3.0, 6.0])
+    out = fedavg([t1, t2], [1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.5, 5.0])
+
+
+def test_cluster_fedavg_matches_manual():
+    stacked = {"w": jnp.asarray([[1.0], [3.0], [10.0], [20.0]])}
+    assignments = jnp.asarray([0, 0, 1, 1])
+    weights = jnp.asarray([1.0, 1.0, 1.0, 3.0])
+    out = cluster_fedavg(stacked, assignments, weights, k=2)
+    np.testing.assert_allclose(np.asarray(out["w"][:, 0]),
+                               [2.0, 2.0, 17.5, 17.5])
+
+
+def test_cluster_fedavg_identity_for_singleton_clusters():
+    stacked = {"w": jax.random.normal(KEY, (3, 4))}
+    out = cluster_fedavg(stacked, jnp.asarray([0, 1, 2]),
+                         jnp.asarray([5.0, 1.0, 2.0]), k=3)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(stacked["w"]), rtol=1e-6)
+
+
+def test_cluster_psum_fedavg_single_client_mesh():
+    """Fleet-regime path on a 1-device 'pod' mesh: aggregation of a
+    single client is the identity."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.aggregation import cluster_psum_fedavg
+    mesh = jax.make_mesh((1,), ("pod",))
+    params = {"w": jnp.asarray([[1.0, 2.0]])}
+
+    def body(p, w, c):
+        inner = jax.tree.map(lambda x: x[0], p)
+        out = cluster_psum_fedavg(inner, w[0], c[0], 3, "pod")
+        return jax.tree.map(lambda x: x[None], out)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(P("pod"), P("pod"), P("pod")),
+                       out_specs=P("pod"))
+    out = fn(params, jnp.asarray([2.0]), jnp.asarray([1], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(params["w"]))

@@ -1,0 +1,72 @@
+"""Data pipeline: Table-I exactness, splits, determinism, non-IID."""
+import numpy as np
+
+from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.data.tokens import make_token_swarm_data, sample_tokens
+
+
+def test_table_1_matches_paper():
+    assert TABLE_I.shape == (5, 14)
+    assert int(TABLE_I.sum()) == 3657
+    np.testing.assert_array_equal(TABLE_I.sum(axis=0),
+                                  [410, 638, 974, 351, 141, 533, 287, 92, 61,
+                                   52, 42, 34, 28, 14])
+    # spot checks straight from the paper's table
+    assert TABLE_I[2, 0] == 307      # C1 Moderate
+    assert TABLE_I[0, 3] == 351      # C4 NoDR only
+    assert TABLE_I[2, 3] == 0        # C4 has no Moderate
+    assert TABLE_I[2, 13] == 0       # C14 has no Moderate
+    assert TABLE_I[0, 2] == 901      # C3 NoDR-heavy
+
+
+def test_dr_dataset_counts_and_splits():
+    small = np.maximum(TABLE_I // 16, (TABLE_I > 0).astype(np.int64))
+    clinics = make_dr_swarm_data(image_size=8, seed=0, table=small)
+    assert len(clinics) == 14
+    for c, clinic in enumerate(clinics):
+        n_total = int(small[:, c].sum())
+        n_train = len(clinic["train"][1])
+        assert n_train == clinic["n_train"]
+        assert abs(n_train - 0.8 * n_total) <= max(2, 0.1 * n_total)
+        assert len(clinic["val"][1]) >= 1 and len(clinic["test"][1]) >= 1
+        X = clinic["train"][0]
+        assert X.dtype == np.float32 and X.min() >= 0 and X.max() <= 1
+
+
+def test_dr_dataset_deterministic():
+    small = np.maximum(TABLE_I // 32, (TABLE_I > 0).astype(np.int64))
+    a = make_dr_swarm_data(image_size=8, seed=7, table=small)
+    b = make_dr_swarm_data(image_size=8, seed=7, table=small)
+    np.testing.assert_array_equal(a[0]["train"][0], b[0]["train"][0])
+
+
+def test_dr_images_class_separable():
+    """Higher grades must carry more bright-lesion signal (the learnable
+    structure the synthetic generator injects)."""
+    small = np.ones_like(TABLE_I)      # every clinic non-empty
+    small[0, 0] = 30
+    small[4, 0] = 30
+    clinics = make_dr_swarm_data(image_size=16, seed=0, table=small)
+    X, y = clinics[0]["train"]
+    mean0 = X[y == 0].mean()
+    mean4 = X[y == 4].mean()
+    assert mean4 > mean0 + 0.01
+
+
+def test_token_clients_are_non_iid():
+    clients = make_token_swarm_data(3, vocab=64, n_seqs=8, seq_len=128)
+    def bigram_mass(toks):
+        h = np.zeros((64, 64))
+        for row in toks:
+            for a, b in zip(row[:-1], row[1:]):
+                h[a, b] += 1
+        return h / h.sum()
+    h0 = bigram_mass(clients[0]["train"][0])
+    h1 = bigram_mass(clients[1]["train"][0])
+    assert np.abs(h0 - h1).sum() > 0.5       # very different transition maps
+
+
+def test_tokens_deterministic():
+    a = sample_tokens(32, 4, 16, client=1, seed=3)
+    b = sample_tokens(32, 4, 16, client=1, seed=3)
+    np.testing.assert_array_equal(a, b)

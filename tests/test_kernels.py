@@ -1,0 +1,109 @@
+"""Pallas kernel validation (deliverable c): shape/dtype sweeps,
+interpret mode vs the pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, H, KV, Sq, Sk, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, Sk, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, Sk, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # B, H, KV, S, D, causal, window, bq, bk
+    (1, 4, 4, 128, 64, True, 0, 64, 64),
+    (2, 8, 2, 256, 64, True, 0, 128, 128),
+    (1, 8, 1, 256, 128, True, 0, 64, 128),
+    (2, 4, 4, 128, 64, False, 0, 64, 64),
+    (1, 4, 2, 256, 64, True, 64, 64, 64),
+    (1, 2, 2, 512, 64, True, 128, 128, 256),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, H, KV, S, D, causal, win, bq, bk = case
+    q, k, v = _qkv(B, H, KV, S, S, D, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=win,
+                              block_q=bq, block_k=bk)
+    expect = ref.ref_attention(q, k, v, causal=causal, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+DECODE_CASES = [
+    # B, H, KV, S, D, pos, window, bk
+    (2, 4, 2, 512, 64, 100, 0, 128),
+    (1, 8, 2, 1024, 128, 1023, 0, 256),
+    (2, 4, 4, 512, 64, 300, 128, 128),
+    (1, 4, 1, 256, 64, 0, 0, 64),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(case, dtype):
+    B, H, KV, S, D, pos, win, bk = case
+    q, k, v = _qkv(B, H, KV, 1, S, D, dtype)
+    out = ops.flash_decode(q, k, v, jnp.asarray(pos, jnp.int32),
+                           window=win, block_k=bk)
+    expect = ref.ref_decode_attention(q, k, v, pos, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(7,), (1000,), (333, 77), (8, 128),
+                                   (3, 5, 17), (4096,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_param_stats_sweep(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 2.5 - 0.7).astype(dtype)
+    m, v = ops.param_stats(x)
+    rm, rv = ref.ref_param_stats(x)
+    np.testing.assert_allclose(float(m), float(rm), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(v), float(rv), rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("N,F,K", [(14, 6, 3), (37, 10, 3), (130, 260, 5),
+                                   (3, 4, 3)])
+def test_kmeans_assign_sweep(N, F, K):
+    X = jax.random.normal(KEY, (N, F))
+    C = jax.random.normal(jax.random.PRNGKey(1), (K, F))
+    out = ops.kmeans_assign(X, C)
+    expect = ref.ref_kmeans_assign(X, C)
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_flash_attention_matches_model_attention():
+    """The kernel and the model's jnp path implement the same math."""
+    from repro.configs import get_config
+    from repro.models import attention as A
+    cfg = get_config("granite-3-2b").smoke()
+    model_p = A.init_attention(KEY, cfg)
+    B, S = 2, 64
+    x = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.1
+    out_model = A.attend_full(model_p, x, cfg)
+
+    q, k, v = A._project_qkv(model_p, x, x, cfg)
+    pos = jnp.arange(S)[None, :]
+    q = A.apply_rope(q, pos, cfg.rope_theta)
+    k = A.apply_rope(k, pos, cfg.rope_theta)
+    o = ops.flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                            jnp.swapaxes(v, 1, 2), causal=True,
+                            block_q=32, block_k=32)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, S, -1) @ model_p["wo"]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(out_model),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,66 @@
+"""Optimizer unit tests (hand-rolled: no optax offline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import make_schedule
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw",
+                                  "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    opt = make_optimizer(OptimizerConfig(name=name, lr=0.1, grad_clip=0))
+    params = {"w": jnp.asarray([3.0, -2.0]), "m": jnp.asarray([[1.5, 0.5]] * 2)}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["m"] ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params, 0.1)
+    assert float(loss(params)) < l0 * 0.05
+
+
+def test_adafactor_state_is_factored():
+    opt = make_optimizer(OptimizerConfig(name="adafactor"))
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    state = opt.init(params)
+    assert state["v"]["w"]["vr"].shape == (64,)
+    assert state["v"]["w"]["vc"].shape == (32,)
+    assert state["v"]["b"]["v"].shape == (64,)
+    # total state size << param size for matrices
+    assert state["v"]["w"]["vr"].size + state["v"]["w"]["vc"].size < 64 * 32 / 5
+
+
+def test_grad_clipping_bounds_update():
+    opt = make_optimizer(OptimizerConfig(name="sgd", lr=1.0, grad_clip=1.0))
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    new, _ = opt.update(huge, state, params, 1.0)
+    assert float(jnp.linalg.norm(new["w"])) <= 1.0 + 1e-5
+
+
+def test_adam_bias_correction_first_step():
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=1.0, grad_clip=0,
+                                         eps=0.0))
+    params = {"w": jnp.asarray([0.0])}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([0.5])}
+    new, _ = opt.update(g, state, params, 1.0)
+    # bias-corrected first step = lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new["w"]), [-1.0], rtol=1e-5)
+
+
+def test_schedules():
+    s = make_schedule("cosine", 1.0, warmup=10, total_steps=100)
+    assert float(s(0)) < 0.2
+    assert float(s(10)) > 0.9
+    assert float(s(99)) < 0.2
+    c = make_schedule("constant", 0.5)
+    assert float(c(1234)) == 0.5

@@ -1,0 +1,183 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import cluster_fedavg, fedavg
+from repro.core.bso import brain_storm
+from repro.core.kmeans import assign, kmeans
+from repro.kernels import ops, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(-10, 10, allow_nan=False, allow_infinity=False, width=32)
+
+
+# ------------------------------------------------------------- aggregation
+
+@given(st.lists(floats, min_size=2, max_size=6),
+       st.integers(1, 1000))
+def test_fedavg_of_identical_params_is_identity(vals, w):
+    """Aggregating N copies of the same model returns that model."""
+    t = {"w": jnp.asarray(vals, jnp.float32)}
+    out = fedavg([t, t, t], [w, 2 * w, 3 * w])
+    np.testing.assert_allclose(np.asarray(out["w"]), vals, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(2, 10), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_cluster_fedavg_is_convex_combination(n, k, seed):
+    """Every aggregated leaf lies within [min, max] of cluster members."""
+    rng = np.random.default_rng(seed)
+    stacked = {"w": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)}
+    assignments = jnp.asarray(rng.integers(0, k, size=n))
+    weights = jnp.asarray(rng.uniform(0.5, 5.0, size=n), jnp.float32)
+    out = np.asarray(cluster_fedavg(stacked, assignments, weights, k=k)["w"])
+    W = np.asarray(stacked["w"])
+    a = np.asarray(assignments)
+    for i in range(n):
+        members = W[a == a[i]]
+        assert out[i].min() >= members.min() - 1e-4
+        assert out[i].max() <= members.max() + 1e-4
+
+
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_cluster_fedavg_idempotent(n, seed):
+    """Aggregating twice equals aggregating once (fixed point)."""
+    rng = np.random.default_rng(seed)
+    stacked = {"w": jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)}
+    assignments = jnp.asarray(rng.integers(0, 2, size=n))
+    weights = jnp.asarray(rng.uniform(1, 3, size=n), jnp.float32)
+    once = cluster_fedavg(stacked, assignments, weights, k=2)
+    twice = cluster_fedavg(once, assignments, weights, k=2)
+    np.testing.assert_allclose(np.asarray(twice["w"]), np.asarray(once["w"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ kmeans
+
+@given(st.integers(4, 30), st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_kmeans_assignment_is_locally_optimal(n, k, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+    C, a = kmeans(jax.random.PRNGKey(seed % 1000), X, k, iters=15)
+    d = np.asarray(jnp.sum((X[:, None] - C[None]) ** 2, axis=-1))
+    a = np.asarray(a)
+    for i in range(n):
+        assert d[i, a[i]] <= d[i].min() + 1e-4
+
+
+# -------------------------------------------------------------- brain storm
+
+@given(st.integers(0, 10_000),
+       st.floats(0, 1), st.floats(0, 1),
+       st.integers(6, 20), st.integers(2, 4))
+def test_brain_storm_invariants(seed, p1, p2, n, k):
+    """For any (p1, p2): centers are valid members of their (post-swap)
+    clusters; assignments remain a partition of the same client set."""
+    rng = np.random.default_rng(seed)
+    val = rng.uniform(size=n).astype(np.float32)
+    assignments = rng.integers(0, k, size=n)
+    plan = brain_storm(rng, assignments.copy(), val, k, p1, p2)
+    assert sorted(plan.assignments.tolist()) != [] \
+        and len(plan.assignments) == n
+    # same multiset of cluster labels (swaps exchange, never create/destroy)
+    assert sorted(plan.assignments.tolist()) == sorted(assignments.tolist())
+    for c in range(k):
+        if plan.centers[c] >= 0:
+            assert plan.assignments[plan.centers[c]] == c
+
+
+# ------------------------------------------------------------------ kernels
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+def test_param_stats_matches_numpy(r, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(r * 37, c * 11)) * 3, jnp.float32)
+    m, v = ops.param_stats(x)
+    np.testing.assert_allclose(float(m), float(np.mean(np.asarray(x))),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(v), float(np.var(np.asarray(x))),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(1, 40), st.integers(1, 6), st.integers(2, 5),
+       st.integers(0, 2 ** 31 - 1))
+def test_kmeans_assign_kernel_matches_ref(n, f, k, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(k, f)), jnp.float32)
+    out = ops.kmeans_assign(X, C)
+    expect = ref.ref_kmeans_assign(X, C)
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+# ----------------------------------------------------------------- softmax
+
+@given(st.integers(1, 2), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_flash_attention_rowsum_property(b, h, seed):
+    """Attention output of constant-v inputs equals that constant
+    (softmax rows sum to 1)."""
+    rng = np.random.default_rng(seed)
+    S, D = 128, 64
+    q = jnp.asarray(rng.normal(size=(b, h, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, S, D)), jnp.float32)
+    v = jnp.ones((b, h, S, D), jnp.float32) * 0.5
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(out), 0.5, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- causality
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_attention_is_causal(seed):
+    """Perturbing a future token must not change past logits."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    S = 12
+    toks = rng.integers(0, cfg.vocab_size, size=(1, S)).astype(np.int32)
+    t = int(rng.integers(1, S))
+    toks2 = toks.copy()
+    toks2[0, t] = (toks2[0, t] + 1) % cfg.vocab_size
+    a, _ = model.forward(params, {"tokens": jnp.asarray(toks)})
+    b, _ = model.forward(params, {"tokens": jnp.asarray(toks2)})
+    np.testing.assert_allclose(np.asarray(a[:, :t]), np.asarray(b[:, :t]),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(a[:, t:] - b[:, t:]))) > 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_ssd_is_causal_and_state_consistent(seed):
+    """Mamba2 SSD: (a) causality; (b) splitting a sequence in half and
+    passing the final state must equal processing it whole."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.ssm import apply_ssm, init_ssm
+    cfg = dataclasses.replace(get_config("mamba2-370m").smoke(), ssm_chunk=8)
+    p = init_ssm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    S = 32
+    x = jnp.asarray(rng.normal(size=(1, S, cfg.d_model)) * 0.1, jnp.float32)
+    y_full, state_full = apply_ssm(p, x, cfg)
+    # causality
+    x2 = x.at[0, S - 4].add(1.0)
+    y2, _ = apply_ssm(p, x2, cfg)
+    np.testing.assert_allclose(np.asarray(y2[:, :S - 4]),
+                               np.asarray(y_full[:, :S - 4]),
+                               rtol=1e-4, atol=1e-5)
+    # carry passing (SSD state + conv boundary frames) across a split
+    y_a, (st_a, conv_a) = apply_ssm(p, x[:, :S // 2], cfg, return_carry=True)
+    y_b, st_b = apply_ssm(p, x[:, S // 2:], cfg, initial_state=st_a,
+                          initial_conv=conv_a)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_b), np.asarray(state_full),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests for the BSO-SL system (paper §III/§IV at
+reduced scale): the full protocol runs, improves over initialization,
+collaboration beats isolation, and the model-agnostic claim holds."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.swarm import SwarmTrainer
+from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.data.tokens import make_token_swarm_data
+from repro.models import build_model
+
+SMALL_TABLE = np.maximum(TABLE_I // 16, (TABLE_I > 0).astype(np.int64) * 2)
+
+
+@pytest.fixture(scope="module")
+def dr_clients():
+    return make_dr_swarm_data(image_size=16, seed=0, table=SMALL_TABLE)
+
+
+def _trainer(model, clients, aggregation, rounds=2, local_steps=4, seed=0):
+    swarm = SwarmConfig(n_clients=len(clients), n_clusters=3, rounds=rounds,
+                        local_steps=local_steps)
+    return SwarmTrainer(model, clients, swarm,
+                        OptimizerConfig(name="adam", lr=2e-3),
+                        jax.random.PRNGKey(seed), batch_size=8,
+                        aggregation=aggregation)
+
+
+def test_bso_swarm_round_runs_and_improves(dr_clients):
+    """The protocol runs end-to-end and learns. With ~16x-reduced data
+    the per-clinic test sets are 2-3 samples, so accuracy is quantised;
+    the robust signals are (a) train loss descends across rounds,
+    (b) final mean accuracy clears the 5-class random floor, and
+    (c) the per-round protocol artifacts are well-formed. The
+    full-scale Table II comparison lives in benchmarks/table2_methods."""
+    model = build_model(get_config("squeezenet-dr"))
+    tr = _trainer(model, dr_clients, "bso", rounds=4, local_steps=10)
+    tr.fit(jax.random.PRNGKey(1))
+    losses = [log.train_loss for log in tr.history]
+    # every round's training loss sits below the ln(5)=1.61 random floor
+    # (per-round loss is non-monotone by design: aggregation mixes
+    # cluster models and the next round re-descends)
+    assert all(l < 1.61 for l in losses), losses
+    assert tr.mean_accuracy("test") > 0.25     # above 1/5 random
+    for log in tr.history:
+        assert log.assignments.shape == (14,)
+        assert set(log.assignments.tolist()) <= {0, 1, 2}
+        assert log.centers.shape[0] == 3
+
+
+def test_collaboration_beats_isolation(dr_clients):
+    """Qualitative Table II ordering at reduced scale: BSO-SL must not
+    collapse relative to isolated local training (noise tolerance for
+    the tiny per-clinic eval sets)."""
+    model = build_model(get_config("squeezenet-dr"))
+    runs = {}
+    for agg in ("none", "bso"):
+        tr = _trainer(model, dr_clients, agg, rounds=4, local_steps=10, seed=2)
+        tr.fit(jax.random.PRNGKey(3))
+        runs[agg] = tr.mean_accuracy("test")
+    assert runs["bso"] >= runs["none"] - 0.12, runs
+    assert all(a > 0.15 for a in runs.values()), runs
+
+
+def test_swarm_is_model_agnostic_lm():
+    """RQ2 structurally: the same SwarmTrainer drives an LM family."""
+    cfg = get_config("granite-3-2b").smoke()
+    clients = make_token_swarm_data(6, cfg.vocab_size, n_seqs=12, seq_len=32)
+    model = build_model(cfg)
+    swarm = SwarmConfig(n_clients=6, n_clusters=2, rounds=2, local_steps=4)
+    tr = SwarmTrainer(model, clients, swarm,
+                      OptimizerConfig(name="adam", lr=2e-3),
+                      jax.random.PRNGKey(0), batch_size=4, aggregation="bso")
+    tr.fit(jax.random.PRNGKey(1))
+    assert len(tr.history) == 2
+    assert np.isfinite(tr.mean_accuracy("test"))
+
+
+def test_fedavg_differs_from_bso_assignments(dr_clients):
+    """FedAvg aggregates globally (one cluster); BSO-SL clusters into
+    k=3 — the mechanisms must be observably different."""
+    model = build_model(get_config("squeezenet-dr"))
+    fa = _trainer(model, dr_clients, "fedavg", rounds=1, local_steps=2)
+    fa.fit(jax.random.PRNGKey(4))
+    bs = _trainer(model, dr_clients, "bso", rounds=1, local_steps=2)
+    bs.fit(jax.random.PRNGKey(4))
+    assert set(fa.history[0].assignments.tolist()) == {0}
+    assert len(set(bs.history[0].assignments.tolist())) >= 2
+
+
+def test_fedavg_synchronizes_clients(dr_clients):
+    """After a FedAvg round every client holds identical parameters."""
+    model = build_model(get_config("squeezenet-dr"))
+    tr = _trainer(model, dr_clients, "fedavg", rounds=1, local_steps=2)
+    tr.fit(jax.random.PRNGKey(5))
+    leaf = jax.tree.leaves(tr.params)[0]
+    first = np.asarray(leaf[0])
+    for i in range(1, leaf.shape[0]):
+        np.testing.assert_allclose(np.asarray(leaf[i]), first, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_bso_cluster_members_synchronized(dr_clients):
+    """After BSA, clients in the same (post-swap) cluster share params."""
+    model = build_model(get_config("squeezenet-dr"))
+    tr = _trainer(model, dr_clients, "bso", rounds=1, local_steps=2)
+    tr.fit(jax.random.PRNGKey(6))
+    a = tr.history[-1].assignments
+    leaf = jax.tree.leaves(tr.params)[0]
+    for c in set(a.tolist()):
+        members = np.where(a == c)[0]
+        ref = np.asarray(leaf[members[0]])
+        for m in members[1:]:
+            np.testing.assert_allclose(np.asarray(leaf[m]), ref, rtol=1e-5,
+                                       atol=1e-6)
+
+
+def test_centralized_baseline_runs(dr_clients):
+    from repro.core.baselines import train_centralized
+    model = build_model(get_config("squeezenet-dr"))
+    _, acc = train_centralized(model, dr_clients,
+                               OptimizerConfig(name="adam", lr=2e-3),
+                               jax.random.PRNGKey(0), steps=30, batch_size=16)
+    assert 0.0 <= acc <= 1.0
