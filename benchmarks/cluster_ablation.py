@@ -13,12 +13,16 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, timed
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig, SwarmConfig
-from repro.core.swarm import SwarmTrainer
+from repro.core.diststats import (swarm_distribution_matrix,
+                                  swarm_distribution_matrix_loop)
+from repro.core.kmeans import kmeans
+from repro.core.swarm import SwarmTrainer, eval_client
 from repro.data.dr import TABLE_I, make_dr_swarm_data
 from repro.models import build_model
+from repro.utils.tree import tree_index, tree_paths_and_leaves
 
 CASES = [
     ("k1_fedavg_like", dict(n_clusters=1)),
@@ -52,5 +56,69 @@ def run(data_scale: int = 2, rounds: int = 6, local_steps: int = 10, seed: int =
     return out
 
 
+def coordinator_bench(n_clients: int = 64, seed: int = 0):
+    """Tentpole measurement: the per-round coordinator phase
+    (distribution stats + k-means + eval) as a handful of fused device
+    programs vs the old per-client host loops.
+
+      old: N·T tiny stat dispatches + sum_i ceil(n_i/64) eval dispatches
+      new: 1 stats program + 1 jit'd Lloyd loop + 1 vmapped eval program
+    """
+    model = build_model(get_config("squeezenet-dr"))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
+    params = jax.vmap(model.init)(keys)
+    n_tensors = len(tree_paths_and_leaves(params))
+
+    # --- distribution stats: host loop (old) vs single fused pass (new)
+    _, us_old = timed(lambda: swarm_distribution_matrix_loop(
+        params, n_clients), warmup=1, iters=3)
+    row(f"coordinator/stats_loop_N{n_clients}", us_old,
+        f"programs={n_clients * n_tensors}")
+    _, us_new = timed(lambda: swarm_distribution_matrix(
+        params, n_clients), warmup=1, iters=3)
+    row(f"coordinator/stats_batched_N{n_clients}", us_new,
+        f"programs=1;speedup={us_old / us_new:.1f}x")
+
+    # --- k-means: eager Lloyd (old) vs one jit'd program (new)
+    feats = jax.block_until_ready(swarm_distribution_matrix(params, n_clients))
+    kkey = jax.random.PRNGKey(seed + 1)
+    _, us_old = timed(lambda: kmeans(kkey, feats, 3, 20), warmup=1, iters=3)
+    row(f"coordinator/kmeans_eager_N{n_clients}", us_old, "programs=O(iters)")
+    km = jax.jit(kmeans, static_argnames=("k", "iters", "use_pallas"))
+    _, us_new = timed(lambda: km(kkey, feats, k=3, iters=20),
+                      warmup=1, iters=3)
+    row(f"coordinator/kmeans_jit_N{n_clients}", us_new,
+        f"programs=1;speedup={us_old / us_new:.1f}x")
+
+    # --- eval + full round on an N-client swarm (clinics cycled to N)
+    table = np.maximum(TABLE_I // 8, (TABLE_I > 0).astype(np.int64) * 2)
+    clinics = make_dr_swarm_data(image_size=16, seed=seed, table=table)
+    clients = [clinics[i % len(clinics)] for i in range(n_clients)]
+    swarm = SwarmConfig(n_clients=n_clients, rounds=1, local_steps=1)
+    tr = SwarmTrainer(model, clients, swarm,
+                      OptimizerConfig(name="adam", lr=2e-3),
+                      jax.random.PRNGKey(seed), batch_size=8,
+                      aggregation="bso")
+
+    def eval_loop():
+        return [eval_client(tr._eval, tr.cfg, tree_index(tr.params, i),
+                            *tr.data[i]["val"]) for i in range(n_clients)]
+
+    n_batches = sum(-(-len(c["val"][1]) // 64) for c in tr.data)
+    _, us_old = timed(eval_loop, warmup=1, iters=3)
+    row(f"coordinator/eval_loop_N{n_clients}", us_old,
+        f"programs={n_batches}")
+    _, us_new = timed(lambda: tr.client_scores("val"), warmup=1, iters=3)
+    row(f"coordinator/eval_vmapped_N{n_clients}", us_new,
+        f"programs=1;speedup={us_old / us_new:.1f}x")
+
+    key = jax.random.PRNGKey(seed + 2)
+    _, us_round = timed(lambda: tr.round(0, key), warmup=1, iters=3)
+    row(f"coordinator/full_bso_round_N{n_clients}", us_round,
+        "stats+kmeans+eval+agg batched")
+    return None
+
+
 if __name__ == "__main__":
+    coordinator_bench()
     run()

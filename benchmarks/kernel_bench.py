@@ -44,9 +44,24 @@ def main():
     row("kernel/param_stats_ref_jit", us,
         f"elems={x.size};bytes={x.size*4:.3e};interpret=0")
 
+    # client-batched swarm reduction: one program for all 64 clients vs
+    # 64 per-client dispatches (the coordinator's old hot path)
+    xs = jax.random.normal(key, (64, 1 << 16))
+    psb_ref = jax.jit(ref.ref_param_stats_batched)
+    _, us_b = timed(psb_ref, xs)
+    row("kernel/param_stats_batched64_ref_jit", us_b,
+        f"N=64;elems={xs.size};programs=1;interpret=0")
+    ps_one = jax.jit(ref.ref_param_stats)
+    _, us_l = timed(lambda: [ps_one(xs[i]) for i in range(64)],
+                    warmup=1, iters=3)
+    row("kernel/param_stats_loop64_ref_jit", us_l,
+        f"N=64;programs=64;slowdown={us_l / us_b:.1f}x;interpret=0")
+
     # interpret-mode (correctness-path) timings for completeness
     _, us = timed(lambda: ops.param_stats(x), warmup=1, iters=2)
     row("kernel/param_stats_pallas_interp", us, "interpret=1")
+    _, us = timed(lambda: ops.param_stats_batched(xs), warmup=1, iters=2)
+    row("kernel/param_stats_batched64_pallas_interp", us, "interpret=1")
     Xs = jax.random.normal(key, (256, 64))
     Cs = jax.random.normal(key, (3, 64))
     _, us = timed(lambda: ops.kmeans_assign(Xs, Cs), warmup=1, iters=2)

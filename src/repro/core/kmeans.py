@@ -1,10 +1,16 @@
 """k-means over client distribution summaries (paper §III.B).
 
 Lloyd iterations with k-means++ seeding, fully jit-able
-(lax.fori_loop + static k). Empty clusters are re-seeded to the point
-farthest from its assigned centroid, so k clusters survive even with
-N=14 clients. The distance/assign step is the ``kmeans_assign`` Pallas
-kernel's oracle path.
+(lax.fori_loop + static k). Empty clusters are re-seeded to *distinct*
+far points — the j-th empty cluster takes the j-th farthest point from
+its assigned centroid — so k clusters survive even with N=14 clients
+and re-seeded centroids can actually separate (a single shared far
+point would leave duplicate centroids forever).
+
+The distance/assign step has two interchangeable implementations:
+the jnp path below (the oracle) and the ``kmeans_assign`` Pallas kernel
+(``use_pallas=True``) — one distance-matmul+argmin device program per
+Lloyd iteration.
 """
 from __future__ import annotations
 
@@ -44,22 +50,39 @@ def assign(X, C):
     return jnp.argmin(_pairwise_sq_dists(X, C), axis=1)
 
 
-def kmeans(key, X, k: int, iters: int = 20):
+def _assign_fn(use_pallas: bool):
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.kmeans_assign
+    return assign
+
+
+def lloyd_step(X, C, k: int, *, use_pallas: bool = False):
+    """One Lloyd iteration: assign, recompute means, reseed empties."""
+    a = _assign_fn(use_pallas)(X, C)
+    onehot = jax.nn.one_hot(a, k, dtype=X.dtype)             # (N, K)
+    counts = onehot.sum(axis=0)                              # (K,)
+    sums = onehot.T @ X                                      # (K, F)
+    newC = sums / jnp.maximum(counts[:, None], 1.0)
+    # empty clusters -> distinct far points: rank points by distance to
+    # their current centroid (farthest first) and hand the j-th empty
+    # cluster the j-th farthest point. Distance to the *assigned*
+    # centroid equals the min pairwise distance, so reuse `a` instead
+    # of a second full (N, K) distance matmul (the Pallas assign call
+    # is opaque to XLA's CSE).
+    diff = X - C[a]
+    d = jnp.sum(diff * diff, axis=1)
+    far_order = jnp.argsort(-d)                              # (N,)
+    empty = counts == 0
+    rank = jnp.clip(jnp.cumsum(empty.astype(jnp.int32)) - 1,
+                    0, X.shape[0] - 1)                       # (K,)
+    newC = jnp.where(empty[:, None], X[far_order[rank]], newC)
+    return newC
+
+
+def kmeans(key, X, k: int, iters: int = 20, *, use_pallas: bool = False):
     """Returns (centroids (k,F), assignments (N,))."""
-    N, F = X.shape
     C0 = kmeans_pp_init(key, X, k)
-
-    def step(it, C):
-        a = assign(X, C)
-        onehot = jax.nn.one_hot(a, k, dtype=X.dtype)            # (N, K)
-        counts = onehot.sum(axis=0)                              # (K,)
-        sums = onehot.T @ X                                      # (K, F)
-        newC = sums / jnp.maximum(counts[:, None], 1.0)
-        # empty cluster -> farthest point from its current centroid
-        d = jnp.min(_pairwise_sq_dists(X, C), axis=1)
-        far = jnp.argmax(d)
-        newC = jnp.where((counts[:, None] > 0), newC, X[far][None, :])
-        return newC
-
-    C = jax.lax.fori_loop(0, iters, step, C0)
-    return C, assign(X, C)
+    C = jax.lax.fori_loop(
+        0, iters, lambda it, C: lloyd_step(X, C, k, use_pallas=use_pallas), C0)
+    return C, _assign_fn(use_pallas)(X, C)

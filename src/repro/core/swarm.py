@@ -27,7 +27,6 @@ from repro.core.kmeans import kmeans
 from repro.models.model import Model
 from repro.optim.optimizers import make_optimizer
 from repro.train.steps import make_eval_step, make_train_step
-from repro.utils.tree import tree_index
 
 
 def make_batch(cfg: ModelConfig, X, y):
@@ -41,18 +40,28 @@ def _sample_batch(rng, X, y, batch):
     return X[idx], y[idx]
 
 
+def pad_eval_split(X, y, n_to: int):
+    """Pad an eval slice to ``n_to`` rows: zero inputs, label=-1 rows
+    (the loss/accuracy mask) — the one copy of the masking convention
+    shared by the per-client loop and the stacked vmapped eval."""
+    pad = n_to - len(y)
+    if pad:
+        X = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
+        y = np.concatenate([y, -np.ones((pad,) + y.shape[1:], y.dtype)])
+    return X, y
+
+
 def eval_client(eval_fn, cfg, params, X, y, batch: int = 64) -> float:
-    """Masked fixed-shape evaluation (pads with label=-1)."""
+    """Masked fixed-shape evaluation of ONE client (pads with label=-1).
+
+    Kept for the centralized baseline and as the parity oracle for the
+    vmapped client-axis eval in :meth:`SwarmTrainer.client_scores`."""
     n = len(y)
     correct, total = 0.0, 0
     for s in range(0, n, batch):
-        xb, yb = X[s:s + batch], y[s:s + batch]
-        pad = batch - len(yb)
-        if pad:
-            xb = np.concatenate([xb, np.zeros((pad,) + xb.shape[1:], xb.dtype)])
-            yb = np.concatenate([yb, -np.ones((pad,) + yb.shape[1:], yb.dtype)])
-        m = eval_fn(params, make_batch(cfg, xb, yb))
         k = len(y[s:s + batch])
+        xb, yb = pad_eval_split(X[s:s + batch], y[s:s + batch], batch)
+        m = eval_fn(params, make_batch(cfg, xb, yb))
         correct += float(m["acc"]) * k
         total += k
     return correct / max(total, 1)
@@ -72,7 +81,8 @@ class SwarmTrainer:
     def __init__(self, model: Model, clients_data: List[dict],
                  swarm: SwarmConfig, opt_cfg: OptimizerConfig,
                  key, *, batch_size: int = 16, aggregation: str = "bso",
-                 lr: Optional[float] = None, reset_opt_each_round: bool = False):
+                 lr: Optional[float] = None, reset_opt_each_round: bool = False,
+                 use_pallas: bool = False):
         assert aggregation in ("bso", "fedavg", "none")
         self.reset_opt_each_round = reset_opt_each_round
         self.model = model
@@ -82,6 +92,7 @@ class SwarmTrainer:
         self.n = len(clients_data)
         self.batch_size = batch_size
         self.aggregation = aggregation
+        self.use_pallas = use_pallas
         self.lr = lr if lr is not None else opt_cfg.lr
         self.opt = make_optimizer(opt_cfg)
 
@@ -89,9 +100,34 @@ class SwarmTrainer:
         self.params = jax.vmap(model.init)(keys)
         self.opt_state = jax.vmap(self.opt.init)(self.params)
         step = make_train_step(model, self.opt)
-        self._vstep = jax.jit(jax.vmap(step, in_axes=(0, 0, 0, None)))
-        self._eval = jax.jit(make_eval_step(model))
-        self._agg = jax.jit(cluster_fedavg, static_argnames=("k",))
+        # params/opt_state are donated: each local step and the round's
+        # aggregation update the swarm state in place instead of copying
+        # the whole stacked pytree every dispatch
+        self._vstep = jax.jit(jax.vmap(step, in_axes=(0, 0, 0, None)),
+                              donate_argnums=(0, 1))
+        eval_step = make_eval_step(model)
+        self._eval = jax.jit(eval_step)
+
+        def client_eval(params, batches):
+            # scan over fixed 64-sample microbatches so the activation
+            # footprint stays O(N * eval_batch) regardless of split
+            # size; still ONE device program for the whole swarm
+            def one(carry, bt):
+                hits, tot = carry
+                m = eval_step(params, bt)
+                valid = jnp.sum(bt["labels"] >= 0).astype(jnp.float32)
+                return (hits + m["acc"] * valid, tot + valid), None
+
+            (hits, tot), _ = jax.lax.scan(
+                one, (jnp.float32(0.0), jnp.float32(0.0)), batches)
+            return hits / jnp.maximum(tot, 1.0)
+
+        self._veval = jax.jit(jax.vmap(client_eval))
+        self._eval_splits: Dict[str, dict] = {}
+        self._agg = jax.jit(cluster_fedavg, static_argnames=("k",),
+                            donate_argnums=(0,))
+        self._kmeans = jax.jit(
+            kmeans, static_argnames=("k", "iters", "use_pallas"))
         self.np_rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
         self.n_samples = np.array([c["n_train"] for c in clients_data], np.float32)
         self.history: List[RoundLog] = []
@@ -119,12 +155,29 @@ class SwarmTrainer:
         return float(jnp.mean(last["loss"])) if last else float("nan")
 
     # ----------------------------------------------------------------- eval
+    def _stacked_split(self, split: str, batch: int = 64) -> dict:
+        """Client-stacked eval data for one split, shaped
+        (N, n_batches, batch, ...): every client padded to the largest
+        client rounded up to the microbatch size, pad rows label=-1
+        (masked). Eval data is static, so the device-resident stack is
+        built once per split."""
+        if split not in self._eval_splits:
+            n_max = max(len(c[split][1]) for c in self.data)
+            n_to = -(-n_max // batch) * batch
+            Xs, ys = [], []
+            for c in self.data:
+                X, y = pad_eval_split(*c[split], n_to)
+                Xs.append(X.reshape((n_to // batch, batch) + X.shape[1:]))
+                ys.append(y.reshape((n_to // batch, batch) + y.shape[1:]))
+            self._eval_splits[split] = make_batch(
+                self.cfg, np.stack(Xs), np.stack(ys))
+        return self._eval_splits[split]
+
     def client_scores(self, split: str = "val") -> np.ndarray:
-        scores = []
-        for i, c in enumerate(self.data):
-            X, y = c[split]
-            p = tree_index(self.params, i)
-            scores.append(eval_client(self._eval, self.cfg, p, X, y))
+        """Per-client masked accuracy — ONE vmapped device program over
+        the client axis per split (was a per-client, per-batch host loop:
+        O(N * ceil(n/64)) dispatches per round)."""
+        scores = self._veval(self.params, self._stacked_split(split))
         return np.asarray(scores, np.float32)
 
     def mean_accuracy(self, split: str = "test") -> float:
@@ -149,9 +202,15 @@ class SwarmTrainer:
             k = 1
         else:
             # --- BSO-SL: distribution upload -> k-means -> brain storm ---
-            feats = swarm_distribution_matrix(self.params, self.n)
+            # --- the coordinator phase is 3 device programs, not O(N·T):
+            # stats (one fused pass), k-means (one jit'd Lloyd loop),
+            # and the vmapped eval that produced `val` above
+            feats = swarm_distribution_matrix(self.params, self.n,
+                                              use_pallas=self.use_pallas)
             k = self.swarm.n_clusters
-            _, assign0 = kmeans(key, feats, k, self.swarm.kmeans_iters)
+            _, assign0 = self._kmeans(key, feats, k=k,
+                                      iters=self.swarm.kmeans_iters,
+                                      use_pallas=self.use_pallas)
             plan = brain_storm(self.np_rng, np.asarray(assign0), val, k,
                                self.swarm.p1, self.swarm.p2)
             assignments, centers, events = plan.assignments, plan.centers, plan.events

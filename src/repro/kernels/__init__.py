@@ -3,7 +3,10 @@
 flash_attention — train/prefill attention (online softmax, GQA index maps)
 flash_decode    — single-token decode against long KV caches
 param_stats     — the paper's §III.B distribution summarisation reduction
-kmeans_assign   — the coordinator's nearest-centroid step
+                  (shifted accumulation; `param_stats_batched` serves the
+                  whole client-stacked swarm on an (N, blocks) grid)
+kmeans_assign   — the coordinator's nearest-centroid step (wired into the
+                  jit'd Lloyd loop in core/kmeans via use_pallas=True)
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd
 wrappers that auto-select interpret mode off-TPU.

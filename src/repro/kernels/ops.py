@@ -14,6 +14,7 @@ from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.kmeans_assign import kmeans_assign as _kmeans_assign
 from repro.kernels.param_stats import param_stats as _param_stats
+from repro.kernels.param_stats import param_stats_batched as _param_stats_batched
 
 
 def auto_interpret() -> bool:
@@ -49,6 +50,14 @@ def param_stats(x, *, block_rows=256, interpret=None):
     if interpret is None:
         interpret = auto_interpret()
     return _param_stats(x, block_rows=block_rows, interpret=interpret)
+
+
+def param_stats_batched(x, *, block_rows=256, interpret=None):
+    """Per-client (mean, var) of a client-stacked (N, ...) tensor in one
+    device program — the swarm-wide §III.B reduction."""
+    if interpret is None:
+        interpret = auto_interpret()
+    return _param_stats_batched(x, block_rows=block_rows, interpret=interpret)
 
 
 def kmeans_assign(X, C, *, block_n=128, interpret=None):

@@ -54,6 +54,12 @@ def ref_param_stats(x):
     return jnp.mean(xf), jnp.var(xf)
 
 
+def ref_param_stats_batched(x):
+    """Per-client (mean, var) over trailing axes: x (N, ...) fp32."""
+    flat = x.astype(jnp.float32).reshape(x.shape[0], -1)
+    return jnp.mean(flat, axis=1), jnp.var(flat, axis=1)
+
+
 def ref_kmeans_assign(X, C):
     """Nearest-centroid ids: X (N,F), C (K,F) -> (N,) int32."""
     x2 = jnp.sum(X.astype(jnp.float32) ** 2, axis=1, keepdims=True)

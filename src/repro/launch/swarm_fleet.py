@@ -45,9 +45,20 @@ def make_fleet_round(model, opt, k: int, n_local_steps: int = 1):
 
     def round_step(sparams, sopt, batch, lr, clusters, weights):
         def local(p, o, b):
+            # slice a fresh microbatch per local step — training
+            # n_local_steps times on the identical batch is not SGD.
+            # ceil-sized microbatches with a clamped final start cover
+            # every row (indivisible batches overlap slightly at the
+            # tail instead of silently dropping rows).
+            n_b = jax.tree.leaves(b)[0].shape[0]
+            mb = min(n_b, -(-n_b // n_local_steps))
+
             def one(i, carry):
                 pp, oo = carry
-                pp, oo, _ = step(pp, oo, b, lr)
+                start = jnp.minimum(i * mb, n_b - mb)
+                bi = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, start, mb, 0), b)
+                pp, oo, _ = step(pp, oo, bi, lr)
                 return (pp, oo)
             return jax.lax.fori_loop(0, n_local_steps, one, (p, o))
 

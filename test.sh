@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+# Pins PYTHONPATH to the src layout and forces an 8-device CPU stand-in
+# so the multi-device shard_map parity tests (e.g. cluster_fedavg vs
+# cluster_psum_fedavg) run instead of skipping. Extra args pass through
+# to pytest.
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
+exec python -m pytest -x -q "$@"

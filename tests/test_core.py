@@ -3,14 +3,23 @@ cluster aggregation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.aggregation import cluster_fedavg, fedavg
 from repro.core.bso import brain_storm
 from repro.core.diststats import (full_params_bytes, param_distribution,
+                                  swarm_distribution_matrix,
+                                  swarm_distribution_matrix_loop,
                                   upload_bytes)
-from repro.core.kmeans import assign, kmeans
+from repro.core.kmeans import assign, kmeans, lloyd_step
 
 KEY = jax.random.PRNGKey(0)
+
+# jax.shard_map only exists on newer jax; fall back to the experimental
+# location (the API is identical for our usage)
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map
 
 
 # ---------------------------------------------------------------- diststats
@@ -32,6 +41,24 @@ def test_upload_bytes_is_tiny_vs_full_params():
     assert upload_bytes(p) == 2 * 2 * 4
     assert full_params_bytes(p) == (256 * 256 + 1024) * 4
     assert upload_bytes(p) < full_params_bytes(p) / 1000
+
+
+def test_swarm_distribution_matrix_batched_matches_loop():
+    """New-vs-old parity at N=8: the single-pass batched coordinator
+    path equals the per-client host loop (jnp and Pallas flavours)."""
+    n = 8
+    ks = jax.random.split(KEY, 3)
+    stacked = {"w": jax.random.normal(ks[0], (n, 5, 3)) * 3.0 + 1.0,
+               "nested": {"b": jax.random.normal(ks[1], (n, 7))},
+               "step": jnp.zeros((n,), jnp.int32)}        # non-float: skipped
+    old = swarm_distribution_matrix_loop(stacked, n)
+    new = swarm_distribution_matrix(stacked, n)
+    assert new.shape == old.shape == (n, 4)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(old),
+                               rtol=1e-5, atol=1e-6)
+    new_pl = swarm_distribution_matrix(stacked, n, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(new_pl), np.asarray(old),
+                               rtol=1e-4, atol=1e-5)
 
 
 # ------------------------------------------------------------------ kmeans
@@ -58,6 +85,28 @@ def test_kmeans_no_empty_clusters_with_enough_points():
     X = jax.random.normal(KEY, (14, 6))
     _, a = kmeans(KEY, X, 3, iters=30)
     assert len(set(np.asarray(a).tolist())) == 3
+
+
+def test_kmeans_empty_clusters_reseed_to_distinct_points():
+    """Two empty clusters must take two *different* far points (the old
+    reseed gave every empty cluster the same farthest point, leaving
+    duplicate centroids that can never separate)."""
+    X = jnp.asarray([[0.0], [1.0], [10.0], [11.0], [20.0], [21.0]])
+    C = jnp.asarray([[0.5], [100.0], [200.0]])   # clusters 1 and 2 empty
+    newC = np.asarray(lloyd_step(X, C, 3))
+    assert newC[1, 0] != newC[2, 0]
+    assert {newC[1, 0], newC[2, 0]} <= set(np.asarray(X)[:, 0].tolist())
+    # the farthest two points from the only live centroid
+    assert {newC[1, 0], newC[2, 0]} == {21.0, 20.0}
+
+
+def test_kmeans_pallas_path_matches_jnp():
+    X = jax.random.normal(KEY, (40, 6))
+    C1, a1 = kmeans(KEY, X, 3, iters=8)
+    C2, a2 = kmeans(KEY, X, 3, iters=8, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2),
+                               rtol=1e-6, atol=1e-6)
 
 
 # -------------------------------------------------------------- brain storm
@@ -111,6 +160,40 @@ def test_paper_probabilities():
     # per-cluster *initiation* rate is what we bound
 
 
+def test_brain_storm_assignments_are_a_relabeling():
+    """For any (p1, p2): post-swap assignments are the same multiset of
+    cluster labels (swaps exchange membership, never create/destroy),
+    and every center is a member of its post-swap cluster."""
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        n, k = 14, 3
+        a0 = rng.integers(0, k, size=n)
+        val = rng.uniform(size=n).astype(np.float32)
+        p1, p2 = rng.uniform(), rng.uniform()
+        plan = brain_storm(rng, a0.copy(), val, k, p1, p2)
+        assert sorted(plan.assignments.tolist()) == sorted(a0.tolist())
+        for c in range(k):
+            if plan.centers[c] >= 0:
+                assert plan.assignments[plan.centers[c]] == c
+
+
+def test_brain_storm_p1_p2_one_is_noop():
+    """p1 = p2 = 1.0 => r > p never fires: assignments untouched, no
+    events, centers are the per-cluster best-validation members."""
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        n, k = 14, 3
+        a0 = rng.integers(0, k, size=n)
+        val = rng.uniform(size=n).astype(np.float32)
+        plan = brain_storm(rng, a0.copy(), val, k, 1.0, 1.0)
+        np.testing.assert_array_equal(plan.assignments, a0)
+        assert plan.events == []
+        for c in range(k):
+            members = np.where(a0 == c)[0]
+            if len(members):
+                assert plan.centers[c] == members[np.argmax(val[members])]
+
+
 # ------------------------------------------------------------- aggregation
 
 def _tree(x):
@@ -153,8 +236,38 @@ def test_cluster_psum_fedavg_single_client_mesh():
         out = cluster_psum_fedavg(inner, w[0], c[0], 3, "pod")
         return jax.tree.map(lambda x: x[None], out)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P("pod"), P("pod"), P("pod")),
-                       out_specs=P("pod"))
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("pod"), P("pod"), P("pod")),
+                   out_specs=P("pod"))
     out = fn(params, jnp.asarray([2.0]), jnp.asarray([1], jnp.int32))
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(params["w"]))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >=4 devices (run via ./test.sh)")
+def test_cluster_fedavg_matches_psum_fedavg_shard_map():
+    """Sim-regime segment-sum Eq.2 == fleet-regime masked-psum Eq.2 on a
+    real multi-device 'pod' mesh."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.aggregation import cluster_psum_fedavg
+    n, k = 4, 2
+    mesh = jax.make_mesh((n,), ("pod",))
+    stacked = {"w": jax.random.normal(KEY, (n, 3, 2)),
+               "b": jax.random.normal(jax.random.PRNGKey(7), (n, 5))}
+    assignments = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    weights = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    expect = cluster_fedavg(stacked, assignments, weights, k=k)
+
+    def body(p, w, c):
+        inner = jax.tree.map(lambda x: x[0], p)
+        out = cluster_psum_fedavg(inner, w[0], c[0], k, "pod")
+        return jax.tree.map(lambda x: x[None], out)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("pod"), P("pod"), P("pod")),
+                   out_specs=P("pod"))
+    got = fn(stacked, weights, assignments)
+    for key in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(expect[key]),
+                                   rtol=1e-5, atol=1e-6)

@@ -77,6 +77,34 @@ def test_param_stats_sweep(shape, dtype):
     np.testing.assert_allclose(float(v), float(rv), rtol=1e-2, atol=1e-2)
 
 
+@pytest.mark.parametrize("mean,n", [(1e4, 4096), (1e3, 300_001), (-5e3, 70_000)])
+def test_param_stats_large_mean_no_cancellation(mean, n):
+    """Regression: the one-pass ss/n - mean^2 form lost ~half the fp32
+    mantissa when mean^2 >> var (var ~0.25 vs mean^2 ~1e8 came back as
+    exactly 0). The shifted accumulation must track the jnp.var oracle."""
+    x = jax.random.normal(KEY, (n,)) * 0.5 + mean
+    m, v = ops.param_stats(x)
+    rm, rv = ref.ref_param_stats(x)
+    np.testing.assert_allclose(float(m), float(rm), rtol=1e-5)
+    np.testing.assert_allclose(float(v), float(rv), rtol=1e-2)
+    assert float(v) > 0.1        # the unshifted kernel clamped this to 0
+
+
+@pytest.mark.parametrize("shape", [(3, 1000), (8, 33, 7), (2, 70000),
+                                   (5, 7), (1, 4096), (14, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_param_stats_batched_sweep(shape, dtype):
+    """Client-batched kernel vs the vmapped jnp oracle."""
+    x = (jax.random.normal(KEY, shape) * 2.0 + 1.3).astype(dtype)
+    m, v = ops.param_stats_batched(x)
+    rm, rv = ref.ref_param_stats_batched(x)
+    assert m.shape == v.shape == (shape[0],)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(rm),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv),
+                               rtol=1e-2, atol=1e-2)
+
+
 @pytest.mark.parametrize("N,F,K", [(14, 6, 3), (37, 10, 3), (130, 260, 5),
                                    (3, 4, 3)])
 def test_kmeans_assign_sweep(N, F, K):

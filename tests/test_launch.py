@@ -95,6 +95,55 @@ def test_run_single_descends():
     assert final_ce < 6.2       # ln(512)=6.24 — beats uniform within 40 steps
 
 
+def test_fleet_round_trains_on_per_step_microbatches():
+    """Regression: the fleet-round fori_loop re-trained on the identical
+    batch every local step. With n_local_steps=2 the round must equal
+    two sequential steps on the batch's two *distinct* halves."""
+    from repro.configs import get_config
+    from repro.configs.base import OptimizerConfig
+    from repro.launch.swarm_fleet import make_fleet_round
+    from repro.models import build_model
+    from repro.optim.optimizers import make_optimizer
+    from repro.train.steps import make_train_step
+
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=1e-2))
+    round_step = make_fleet_round(model, opt, k=1, n_local_steps=2)
+
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 4, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    sparams = jax.tree.map(lambda x: x[None], params)
+    sopt = jax.vmap(opt.init)(sparams)
+    out_p, _ = jax.jit(round_step)(
+        sparams, sopt, batch, jnp.float32(1e-2),
+        jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.float32))
+
+    step = make_train_step(model, opt)
+    p, o = params, opt.init(params)
+    for half in (slice(0, 2), slice(2, 4)):
+        hb = {k: v[0, half] for k, v in batch.items()}
+        p, o, _ = step(p, o, hb, jnp.float32(1e-2))
+
+    # adam's rsqrt amplifies vmap/jit reassociation noise to ~4e-4; the
+    # old bug (same batch twice) is two orders of magnitude away (~4e-2)
+    got = jax.tree.leaves(jax.tree.map(lambda x: x[0], out_p))
+    for g, w in zip(got, jax.tree.leaves(p)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-2, atol=2e-3)
+
+    p2, o2 = params, opt.init(params)
+    full = {k: v[0] for k, v in batch.items()}
+    for _ in range(2):
+        p2, o2, _ = step(p2, o2, full, jnp.float32(1e-2))
+    bug_gap = max(float(jnp.abs(g - w).max())
+                  for g, w in zip(got, jax.tree.leaves(p2)))
+    assert bug_gap > 1e-2, bug_gap
+
+
 def test_serve_prefill_cache_matches_forward():
     """serve.prefill_into_cache must leave the cache in the same state a
     teacher-forced forward would produce (greedy next tokens agree)."""

@@ -120,6 +120,22 @@ def test_bso_cluster_members_synchronized(dr_clients):
                                        atol=1e-6)
 
 
+def test_vmapped_eval_matches_per_client_loop(dr_clients):
+    """New-vs-old parity: the one-program vmapped client eval equals the
+    old per-client, per-batch eval_client host loop on every split."""
+    from repro.core.swarm import eval_client
+    from repro.utils.tree import tree_index
+    model = build_model(get_config("squeezenet-dr"))
+    tr = _trainer(model, dr_clients, "bso", rounds=1, local_steps=2)
+    tr.fit(jax.random.PRNGKey(7))
+    for split in ("val", "test"):
+        scores = tr.client_scores(split)
+        for i, c in enumerate(tr.data):
+            X, y = c[split]
+            old = eval_client(tr._eval, tr.cfg, tree_index(tr.params, i), X, y)
+            np.testing.assert_allclose(scores[i], old, rtol=1e-5, atol=1e-6)
+
+
 def test_centralized_baseline_runs(dr_clients):
     from repro.core.baselines import train_centralized
     model = build_model(get_config("squeezenet-dr"))
