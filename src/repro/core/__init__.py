@@ -2,9 +2,18 @@
 
 local training -> distribution upload -> k-means clustering ->
 brain-storm aggregation (center select / replace / swap + Eq.2 FedAvg).
+
+The round itself is the pure functional engine in
+:mod:`repro.core.engine` (``swarm_round`` over a ``SwarmState``
+pytree); :class:`repro.core.swarm.SwarmTrainer` is the stateful host
+wrapper.
 """
 from repro.core.aggregation import cluster_fedavg, cluster_psum_fedavg, fedavg  # noqa: F401
-from repro.core.bso import BSAPlan, brain_storm  # noqa: F401
+from repro.core.bso import BSAPlan, brain_storm, brain_storm_jax  # noqa: F401
 from repro.core.diststats import param_distribution, swarm_distribution_matrix  # noqa: F401
+from repro.core.engine import (EngineConfig, RoundMetrics, SwarmData,  # noqa: F401
+                               SwarmState, jit_run_rounds, jit_swarm_round,
+                               make_fleet_round, make_swarm_data,
+                               make_swarm_state, run_rounds, swarm_round)
 from repro.core.kmeans import kmeans  # noqa: F401
 from repro.core.swarm import SwarmTrainer  # noqa: F401

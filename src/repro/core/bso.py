@@ -1,7 +1,7 @@
 """Brain Storm Aggregation (paper §III.C).
 
-Host-side coordinator logic — deliberately lightweight, mirroring the
-paper's server whose *only* job is assigning neighbours:
+The coordinator's per-round decision, mirroring the paper's server
+whose *only* job is assigning neighbours:
 
   1. **Select cluster center** — the best validation score in each
      cluster.
@@ -15,6 +15,18 @@ paper's server whose *only* job is assigning neighbours:
      within each (post-swap) cluster; the jit-able segment-sum version
      lives in :mod:`repro.core.aggregation`.
 
+Two implementations of the same decision procedure:
+
+* :func:`brain_storm_jax` — the engine path (`repro.core.engine`):
+  fixed-shape, `jax.random`-key-driven, fully traceable, so the whole
+  BSO round (local steps + coordinator + Eq. 2) fuses into ONE jit'd
+  device program and scans over rounds. Centers come from a masked
+  per-cluster argmax, random members from a masked Gumbel-argmax, and
+  the sequential cross-cluster swaps unroll over the static ``k``.
+* :func:`brain_storm` — the original host-side numpy version, kept as
+  the parity oracle (the two consume different RNG streams, so parity
+  is statistical: same event *rates*, same structural invariants).
+
 With the paper's p1=0.9 / p2=0.8 and r > p triggering, disruption rates
 are 10% / 20% per cluster per round.
 """
@@ -23,6 +35,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -79,3 +93,61 @@ def brain_storm(rng: np.random.Generator, assignments: np.ndarray,
                           f"(clients {ci} <-> {oi}, r2={r2:.3f})")
 
     return BSAPlan(assignments=assignments, centers=centers, events=events)
+
+
+def brain_storm_jax(key, assignments, val_scores, k: int, p1, p2):
+    """Traceable BSA planning — the same decision procedure as
+    :func:`brain_storm`, expressed in fixed shapes over a static ``k``.
+
+    assignments: (N,) int cluster ids from k-means.
+    val_scores:  (N,) float local validation accuracies.
+
+    Returns ``(assignments, centers, n_replaced, n_swapped)``:
+    post-swap (N,) assignments, (k,) center client indices (-1 for an
+    empty cluster), and the round's event counts (replacing the numpy
+    version's event strings — the only host-facing residue).
+    """
+    a = jnp.asarray(assignments, jnp.int32)
+    val = jnp.asarray(val_scores, jnp.float32)
+    member = a[None, :] == jnp.arange(k, dtype=jnp.int32)[:, None]   # (k, N)
+    occupied = jnp.any(member, axis=1)                               # (k,)
+    n_occ = jnp.sum(occupied.astype(jnp.int32))
+
+    # 1. centers = best validation score per cluster (masked argmax)
+    centers = jnp.argmax(jnp.where(member, val[None, :], -jnp.inf),
+                         axis=1).astype(jnp.int32)
+    centers = jnp.where(occupied, centers, -1)
+
+    k_rep, k_member, k_swap, k_other = jax.random.split(key, 4)
+
+    # 2a. random center replacement (r1 > p1): a uniformly random member
+    # per cluster via masked Gumbel-argmax (one draw per (cluster,
+    # client), no data-dependent shapes)
+    r1 = jax.random.uniform(k_rep, (k,))
+    g = jax.random.gumbel(k_member, (k, a.shape[0]))
+    rand_member = jnp.argmax(jnp.where(member, g, -jnp.inf),
+                             axis=1).astype(jnp.int32)
+    do_rep = (r1 > p1) & occupied
+    n_replaced = jnp.sum((do_rep & (rand_member != centers)).astype(jnp.int32))
+    centers = jnp.where(do_rep, rand_member, centers)
+
+    # 2b. sequential cross-cluster center swaps (r2 > p2). Later swaps
+    # must see earlier ones (same as the host loop), so unroll over the
+    # static k; the swap partner is a uniformly random *other* occupied
+    # cluster via masked Gumbel-argmax.
+    r2 = jax.random.uniform(k_swap, (k,))
+    g2 = jax.random.gumbel(k_other, (k, k))
+    n_swapped = jnp.zeros((), jnp.int32)
+    for c in range(k):
+        valid_other = occupied & (jnp.arange(k) != c)
+        other = jnp.argmax(jnp.where(valid_other, g2[c], -jnp.inf)
+                           ).astype(jnp.int32)
+        do_swap = (r2[c] > p2) & occupied[c] & (n_occ > 1)
+        ci, oi = centers[c], centers[other]
+        swapped_centers = centers.at[c].set(oi).at[other].set(ci)
+        swapped_a = a.at[ci].set(a[oi]).at[oi].set(a[ci])
+        centers = jnp.where(do_swap, swapped_centers, centers)
+        a = jnp.where(do_swap, swapped_a, a)
+        n_swapped = n_swapped + do_swap.astype(jnp.int32)
+
+    return a, centers, n_replaced, n_swapped

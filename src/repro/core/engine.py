@@ -1,0 +1,364 @@
+"""Functional BSO-SL round engine: ONE jit'd program per round.
+
+The paper's round (§III) — local SGD → distribution upload → k-means →
+brain-storm aggregation — is expressed here as a pure function over an
+explicit :class:`SwarmState` pytree::
+
+    state, metrics = swarm_round(state, data, cfg)
+
+Everything inside is traceable: local-training batches are sampled
+on-device (`jax.random` gather over the device-resident stacked
+dataset in :class:`SwarmData`), the coordinator runs the jax
+``brain_storm_jax`` port, and Eq. 2 aggregation is the segment-sum
+``cluster_fedavg``. A whole sim-regime round is therefore a single
+device program, and :func:`run_rounds` scans it over rounds so a full
+``fit`` is ONE program too.
+
+Both regimes share this body:
+
+* **sim** — :func:`swarm_round`; the stateful
+  :class:`repro.core.swarm.SwarmTrainer` is a thin host wrapper.
+* **fleet** — :func:`make_fleet_round` composes the same
+  :func:`local_phase` + in-program distribution-stat upload
+  (``param_stats_batched`` under ``use_pallas``) + ``cluster_fedavg``;
+  only the O(clients) coordinator decision (k-means + brain storm)
+  arrives from the host, matching the paper's neighbour-assignment
+  server (see ``repro/launch/swarm_fleet.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.aggregation import cluster_fedavg
+from repro.core.bso import brain_storm_jax
+from repro.core.diststats import swarm_distribution_matrix
+from repro.core.kmeans import kmeans
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer
+from repro.train.steps import make_eval_step, make_train_step
+
+# --------------------------------------------------------------------- state
+
+
+class SwarmState(NamedTuple):
+    """The complete mutable state of a swarm, as one pytree.
+
+    Every field has a leading client axis N where applicable, so the
+    state threads through jit/scan/donation without host round-trips.
+    """
+    params: Any                      # client-stacked model pytree (N, ...)
+    opt_state: Any                   # client-stacked optimizer pytree
+    key: Any                         # PRNG key driving sampling + BSA
+    round: Any                       # () int32 round counter
+    n_samples: Any                   # (N,) float32 |D_h| (Eq. 2 weights)
+
+
+class SwarmData(NamedTuple):
+    """Device-resident, fixed-shape swarm dataset.
+
+    train:   batch pytree with shape (N, n_max, ...); clients shorter
+             than n_max are padded (pad rows are never sampled).
+    train_n: (N,) int32 true train-set sizes — the sampling bound.
+    val:     client-stacked eval batches (N, n_batches, batch, ...)
+             with label=-1 masking (see :func:`stack_eval_split`).
+    """
+    train: Any
+    train_n: Any
+    val: Any
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round outputs (all device scalars/arrays, scan-stackable)."""
+    mean_val_acc: Any                # () — paper Eq. 3 on the val split
+    val_acc: Any                     # (N,) per-client val accuracy
+    train_loss: Any                  # () mean loss of the last local step
+    assignments: Any                 # (N,) int32 post-BSA clusters
+    centers: Any                     # (k,) int32 center client ids
+    n_replaced: Any                  # () int32 BSA replacement events
+    n_swapped: Any                   # () int32 BSA swap events
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static round configuration (hashable — a jit static argument).
+
+    Holds the model/optimizer *objects*: both are frozen dataclasses of
+    pure functions, so configs built from the same instances hash equal
+    and share the compiled round program.
+    """
+    model: Model
+    opt: Optimizer
+    local_steps: int
+    batch_size: int
+    lr: float
+    aggregation: str = "bso"         # bso | fedavg | none
+    n_clusters: int = 3
+    p1: float = 0.9
+    p2: float = 0.8
+    kmeans_iters: int = 20
+    use_pallas: bool = False
+    reset_opt_each_round: bool = False
+    local_unroll: int = 1            # scan unroll of the local phase
+                                     # (CPU wants local_steps, TPU 1)
+
+
+# --------------------------------------------------------------- data layout
+
+
+def make_batch(cfg: ModelConfig, X, y):
+    if cfg.family == "cnn":
+        return {"images": jnp.asarray(X), "labels": jnp.asarray(y)}
+    return {"tokens": jnp.asarray(X), "labels": jnp.asarray(y)}
+
+
+def pad_eval_split(X, y, n_to: int):
+    """Pad an eval slice to ``n_to`` rows: zero inputs, label=-1 rows
+    (the loss/accuracy mask) — the one copy of the masking convention
+    shared by the per-client loop and the stacked vmapped eval."""
+    pad = n_to - len(y)
+    if pad:
+        X = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
+        y = np.concatenate([y, -np.ones((pad,) + y.shape[1:], y.dtype)])
+    return X, y
+
+
+def stack_eval_split(cfg: ModelConfig, clients_data, split: str,
+                     batch: int = 64):
+    """Client-stacked eval data for one split, shaped
+    (N, n_batches, batch, ...): every client padded to the largest
+    client rounded up to the microbatch size, pad rows label=-1
+    (masked)."""
+    n_max = max(len(c[split][1]) for c in clients_data)
+    n_to = -(-n_max // batch) * batch
+    Xs, ys = [], []
+    for c in clients_data:
+        X, y = pad_eval_split(*c[split], n_to)
+        Xs.append(X.reshape((n_to // batch, batch) + X.shape[1:]))
+        ys.append(y.reshape((n_to // batch, batch) + y.shape[1:]))
+    return make_batch(cfg, np.stack(Xs), np.stack(ys))
+
+
+def make_swarm_data(cfg: ModelConfig, clients_data, *,
+                    eval_batch: int = 64) -> SwarmData:
+    """Build the device-resident :class:`SwarmData` from the per-clinic
+    host dicts. Train sets are padded to the largest client with
+    label=-1 poison rows; ``train_n`` bounds the on-device sampler so
+    pads are never drawn."""
+    n_max = max(len(c["train"][1]) for c in clients_data)
+    Xs, ys = [], []
+    for c in clients_data:
+        X, y = pad_eval_split(*c["train"], n_max)
+        Xs.append(X)
+        ys.append(y)
+    train = make_batch(cfg, np.stack(Xs), np.stack(ys))
+    train_n = jnp.asarray([len(c["train"][1]) for c in clients_data],
+                          jnp.int32)
+    return SwarmData(train=train, train_n=train_n,
+                     val=stack_eval_split(cfg, clients_data, "val",
+                                          batch=eval_batch))
+
+
+def make_swarm_state(model: Model, opt: Optimizer, clients_data,
+                     key) -> SwarmState:
+    """Fresh per-client params/opt state + the round-driving key."""
+    init_key, round_key = jax.random.split(key)
+    keys = jax.random.split(init_key, len(clients_data))
+    params = jax.vmap(model.init)(keys)
+    opt_state = jax.vmap(opt.init)(params)
+    n_samples = jnp.asarray([c["n_train"] for c in clients_data],
+                            jnp.float32)
+    return SwarmState(params=params, opt_state=opt_state, key=round_key,
+                      round=jnp.zeros((), jnp.int32), n_samples=n_samples)
+
+
+# -------------------------------------------------------------- round pieces
+
+
+def sample_local_batch(key, train, train_n, batch_size: int):
+    """On-device per-client minibatch: uniform-with-replacement indices
+    bounded per client by ``train_n`` (pad rows are unreachable), then a
+    vmapped gather — no host loop, no data transfer."""
+    N = train_n.shape[0]
+    idx = jax.random.randint(key, (N, batch_size), 0, train_n[:, None])
+    return jax.tree.map(
+        lambda x: jax.vmap(lambda a, i: a[i])(x, idx), train)
+
+
+def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
+                unroll: int = 1):
+    """The shared local-training body of both regimes: a scan of
+    vmapped train steps over the client axis.
+
+    ``xs`` is the scan input (sim: per-step sample keys; fleet: step
+    indices) and ``batch_for_step(x)`` materialises that step's stacked
+    (N, B, ...) batch — sampling a fresh gather in the sim regime,
+    slicing the uploaded round batch in the fleet regime.
+
+    ``unroll`` trades compile time for loop overhead: XLA's CPU backend
+    executes ops inside a while body markedly slower than the same ops
+    unrolled (~2x on convs), so CPU benchmarking wants
+    ``unroll=len(xs)``; TPU and large models want the rolled default."""
+    vstep = jax.vmap(step, in_axes=(0, 0, 0, None))
+
+    def body(carry, x):
+        p, o = carry
+        p, o, m = vstep(p, o, batch_for_step(x), lr)
+        return (p, o), jnp.mean(m["loss"])
+
+    (params, opt_state), losses = jax.lax.scan(body, (params, opt_state),
+                                               xs, unroll=unroll)
+    return params, opt_state, losses
+
+
+def make_client_eval(model: Model):
+    """Per-client masked accuracy over stacked (N, n_batches, batch, ..)
+    eval data — one vmapped program, scanning fixed microbatches so the
+    activation footprint stays O(N * batch) regardless of split size."""
+    eval_step = make_eval_step(model)
+
+    def client_eval(params, batches):
+        def one(carry, bt):
+            hits, tot = carry
+            m = eval_step(params, bt)
+            valid = jnp.sum(bt["labels"] >= 0).astype(jnp.float32)
+            return (hits + m["acc"] * valid, tot + valid), None
+
+        (hits, tot), _ = jax.lax.scan(
+            one, (jnp.float32(0.0), jnp.float32(0.0)), batches)
+        return hits / jnp.maximum(tot, 1.0)
+
+    return jax.vmap(client_eval)
+
+
+# ---------------------------------------------------------------- the round
+
+
+def swarm_round(state: SwarmState, data: SwarmData,
+                cfg: EngineConfig):
+    """One full BSO-SL round as a pure function — local steps, eval,
+    distribution upload, k-means, brain storm, Eq. 2 aggregation.
+
+    Jit it with ``cfg`` static (see :data:`jit_swarm_round`) and the
+    entire round is one device program; scan it (:func:`run_rounds`)
+    and a whole training run is one program."""
+    model, opt = cfg.model, cfg.opt
+    step = make_train_step(model, opt)
+    next_key, k_local, k_kmeans, k_bso = jax.random.split(state.key, 4)
+
+    # --- local phase: cfg.local_steps of on-device-sampled SGD
+    sample_keys = jax.random.split(k_local, cfg.local_steps)
+    params, opt_state, losses = local_phase(
+        step, state.params, state.opt_state, cfg.lr, sample_keys,
+        lambda kt: sample_local_batch(kt, data.train, data.train_n,
+                                      cfg.batch_size),
+        unroll=cfg.local_unroll)
+    train_loss = losses[-1]
+
+    # --- eval: per-client val accuracy (shared within clusters, §III.C)
+    val = make_client_eval(model)(params, data.val)
+
+    # --- coordinator + aggregation
+    N = data.train_n.shape[0]
+    zero = jnp.zeros((), jnp.int32)
+    if cfg.aggregation == "none":
+        assignments = jnp.zeros((N,), jnp.int32)
+        centers = jnp.zeros((0,), jnp.int32)
+        n_rep = n_swap = zero
+    else:
+        if cfg.aggregation == "fedavg":
+            k = 1
+            assignments = jnp.zeros((N,), jnp.int32)
+            centers = jnp.argmax(val)[None].astype(jnp.int32)
+            n_rep = n_swap = zero
+        else:
+            k = cfg.n_clusters
+            feats = swarm_distribution_matrix(params,
+                                              use_pallas=cfg.use_pallas)
+            _, a0 = kmeans(k_kmeans, feats, k=k, iters=cfg.kmeans_iters,
+                           use_pallas=cfg.use_pallas)
+            assignments, centers, n_rep, n_swap = brain_storm_jax(
+                k_bso, a0, val, k, cfg.p1, cfg.p2)
+        params = cluster_fedavg(params, assignments, state.n_samples, k=k)
+        if cfg.reset_opt_each_round:
+            opt_state = jax.vmap(opt.init)(params)
+
+    new_state = SwarmState(params=params, opt_state=opt_state, key=next_key,
+                           round=state.round + 1, n_samples=state.n_samples)
+    metrics = RoundMetrics(mean_val_acc=jnp.mean(val), val_acc=val,
+                           train_loss=train_loss, assignments=assignments,
+                           centers=centers, n_replaced=n_rep,
+                           n_swapped=n_swap)
+    return new_state, metrics
+
+
+def run_rounds(state: SwarmState, data: SwarmData, cfg: EngineConfig,
+               rounds: int):
+    """Scan :func:`swarm_round` over ``rounds``: the whole multi-round
+    fit as ONE device program. Metrics gain a leading (rounds,) axis."""
+    def body(s, _):
+        return swarm_round(s, data, cfg)
+
+    return jax.lax.scan(body, state, None, length=rounds)
+
+
+# module-level jitted entry points: the cache is shared across every
+# host wrapper holding an equal EngineConfig (state buffers donated —
+# each round updates the swarm in place)
+jit_swarm_round = jax.jit(swarm_round, static_argnames=("cfg",),
+                          donate_argnums=(0,))
+jit_run_rounds = jax.jit(run_rounds, static_argnames=("cfg", "rounds"),
+                         donate_argnums=(0,))
+
+
+# ------------------------------------------------------------- fleet regime
+
+
+def make_fleet_round(model: Model, opt: Optimizer, k: int,
+                     n_local_steps: int = 1, *, use_pallas: bool = False):
+    """Fleet round built from the same body as :func:`swarm_round`:
+    the shared :func:`local_phase` (per-step microbatch slices of the
+    uploaded round batch instead of on-device sampling), then the
+    distribution-stat upload computed *inside* the program — the
+    ``param_stats_batched`` kernel under ``use_pallas``, the jnp oracle
+    otherwise — so the O(#tensors) stats ride the same collective as
+    the round step, then Eq. 2 ``cluster_fedavg`` (XLA SPMD inserts the
+    cross-pod collectives).
+
+    Only the O(clients) coordinator decision (k-means + brain storm)
+    stays host-side, matching the paper's neighbour-assignment server:
+    ``clusters`` is next round's post-BSA assignment computed from the
+    ``stats`` this round returns.
+
+    Returns ``round_step(sparams, sopt, batch, lr, clusters, weights)
+    -> (sparams, sopt, stats)``.
+    """
+    step = make_train_step(model, opt)
+
+    def round_step(sparams, sopt, batch, lr, clusters, weights):
+        # ceil-sized microbatches with a clamped final start cover every
+        # row (indivisible batches overlap slightly at the tail instead
+        # of silently dropping rows); training n_local_steps times on
+        # the identical batch would not be SGD.
+        n_b = jax.tree.leaves(batch)[0].shape[1]
+        mb = min(n_b, -(-n_b // n_local_steps))
+
+        def batch_for_step(i):
+            start = jnp.minimum(i * mb, n_b - mb)
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, start, mb, 1),
+                batch)
+
+        sparams, sopt, _ = local_phase(step, sparams, sopt, lr,
+                                       jnp.arange(n_local_steps),
+                                       batch_for_step)
+        stats = swarm_distribution_matrix(sparams, use_pallas=use_pallas)
+        sparams = cluster_fedavg(sparams, clusters, weights, k=k)
+        return sparams, sopt, stats
+
+    return round_step

@@ -1,61 +1,50 @@
-"""Swarm orchestration (sim regime): N clients as a stacked pytree.
+"""Stateful host wrapper over the functional round engine (sim regime).
 
-One :class:`SwarmTrainer` runs all four methods of the paper's Table II
-via ``aggregation`` mode:
+Since the engine redesign, all round logic lives in
+:mod:`repro.core.engine`: an explicit :class:`~repro.core.engine.SwarmState`
+pytree and the pure ``swarm_round(state, data, cfg)`` function, jit'd
+into ONE device program per round (and scannable over rounds via
+``run_rounds``). :class:`SwarmTrainer` is the thin stateful shell that
+remains for host-driven use — it owns a ``SwarmState``, advances it one
+engine call per round, and keeps the familiar surface:
 
-  "bso"     — the full BSO-SL round (§III): local training → distribution
-              upload → k-means clustering → brain-storm aggregation.
-  "fedavg"  — global FedAvg every round (the federated baseline).
-  "none"    — local training only (the isolation baseline).
+  ``round`` / ``fit``        — advance the protocol, appending
+                               :class:`RoundLog` entries to ``history``
+  ``fit_scanned``            — the same rounds as one scanned program
+  ``client_scores``          — per-client masked accuracy on any split
+  ``aggregation`` mode       — "bso" (full §III round), "fedavg"
+                               (federated baseline), "none" (isolation)
 
-(The centralized baseline pools data and is in baselines.py.)
+(The centralized baseline pools data and is in baselines.py.) Batch
+sampling, the brain-storm decision, k-means and Eq. 2 all execute
+on-device inside the engine program; the only host-side residue is the
+conversion of per-round metrics into ``RoundLog``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, OptimizerConfig, SwarmConfig
-from repro.core.aggregation import cluster_fedavg
-from repro.core.bso import brain_storm
-from repro.core.diststats import swarm_distribution_matrix
-from repro.core.kmeans import kmeans
+from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.engine import (EngineConfig, RoundMetrics, SwarmState,
+                               jit_run_rounds, jit_swarm_round,
+                               make_batch, make_client_eval, make_swarm_data,
+                               make_swarm_state, pad_eval_split,
+                               stack_eval_split)
 from repro.models.model import Model
 from repro.optim.optimizers import make_optimizer
-from repro.train.steps import make_eval_step, make_train_step
-
-
-def make_batch(cfg: ModelConfig, X, y):
-    if cfg.family == "cnn":
-        return {"images": jnp.asarray(X), "labels": jnp.asarray(y)}
-    return {"tokens": jnp.asarray(X), "labels": jnp.asarray(y)}
-
-
-def _sample_batch(rng, X, y, batch):
-    idx = rng.integers(0, len(y), size=batch)
-    return X[idx], y[idx]
-
-
-def pad_eval_split(X, y, n_to: int):
-    """Pad an eval slice to ``n_to`` rows: zero inputs, label=-1 rows
-    (the loss/accuracy mask) — the one copy of the masking convention
-    shared by the per-client loop and the stacked vmapped eval."""
-    pad = n_to - len(y)
-    if pad:
-        X = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
-        y = np.concatenate([y, -np.ones((pad,) + y.shape[1:], y.dtype)])
-    return X, y
+from repro.train.steps import make_eval_step
 
 
 def eval_client(eval_fn, cfg, params, X, y, batch: int = 64) -> float:
     """Masked fixed-shape evaluation of ONE client (pads with label=-1).
 
     Kept for the centralized baseline and as the parity oracle for the
-    vmapped client-axis eval in :meth:`SwarmTrainer.client_scores`."""
+    engine's vmapped client-axis eval (:func:`make_client_eval`)."""
     n = len(y)
     correct, total = 0.0, 0
     for s in range(0, n, batch):
@@ -77,6 +66,12 @@ class RoundLog:
     train_loss: float
 
 
+def _round_log(r: int, m: RoundMetrics) -> RoundLog:
+    events = (["replace"] * int(m.n_replaced) + ["swap"] * int(m.n_swapped))
+    return RoundLog(r, float(m.mean_val_acc), np.asarray(m.assignments),
+                    np.asarray(m.centers), events, float(m.train_loss))
+
+
 class SwarmTrainer:
     def __init__(self, model: Model, clients_data: List[dict],
                  swarm: SwarmConfig, opt_cfg: OptimizerConfig,
@@ -84,7 +79,6 @@ class SwarmTrainer:
                  lr: Optional[float] = None, reset_opt_each_round: bool = False,
                  use_pallas: bool = False):
         assert aggregation in ("bso", "fedavg", "none")
-        self.reset_opt_each_round = reset_opt_each_round
         self.model = model
         self.cfg = model.cfg
         self.data = clients_data
@@ -92,45 +86,38 @@ class SwarmTrainer:
         self.n = len(clients_data)
         self.batch_size = batch_size
         self.aggregation = aggregation
-        self.use_pallas = use_pallas
         self.lr = lr if lr is not None else opt_cfg.lr
         self.opt = make_optimizer(opt_cfg)
+        self.n_samples = np.array([c["n_train"] for c in clients_data],
+                                  np.float32)
 
-        keys = jax.random.split(key, self.n)
-        self.params = jax.vmap(model.init)(keys)
-        self.opt_state = jax.vmap(self.opt.init)(self.params)
-        step = make_train_step(model, self.opt)
-        # params/opt_state are donated: each local step and the round's
-        # aggregation update the swarm state in place instead of copying
-        # the whole stacked pytree every dispatch
-        self._vstep = jax.jit(jax.vmap(step, in_axes=(0, 0, 0, None)),
-                              donate_argnums=(0, 1))
-        eval_step = make_eval_step(model)
-        self._eval = jax.jit(eval_step)
+        self.engine_cfg = EngineConfig(
+            model=model, opt=self.opt, local_steps=self._local_steps(),
+            batch_size=batch_size, lr=self.lr, aggregation=aggregation,
+            n_clusters=swarm.n_clusters, p1=swarm.p1, p2=swarm.p2,
+            kmeans_iters=swarm.kmeans_iters, use_pallas=use_pallas,
+            reset_opt_each_round=reset_opt_each_round)
+        self.swarm_data = make_swarm_data(self.cfg, clients_data)
+        self.state: SwarmState = make_swarm_state(model, self.opt,
+                                                  clients_data, key)
 
-        def client_eval(params, batches):
-            # scan over fixed 64-sample microbatches so the activation
-            # footprint stays O(N * eval_batch) regardless of split
-            # size; still ONE device program for the whole swarm
-            def one(carry, bt):
-                hits, tot = carry
-                m = eval_step(params, bt)
-                valid = jnp.sum(bt["labels"] >= 0).astype(jnp.float32)
-                return (hits + m["acc"] * valid, tot + valid), None
-
-            (hits, tot), _ = jax.lax.scan(
-                one, (jnp.float32(0.0), jnp.float32(0.0)), batches)
-            return hits / jnp.maximum(tot, 1.0)
-
-        self._veval = jax.jit(jax.vmap(client_eval))
-        self._eval_splits: Dict[str, dict] = {}
-        self._agg = jax.jit(cluster_fedavg, static_argnames=("k",),
-                            donate_argnums=(0,))
-        self._kmeans = jax.jit(
-            kmeans, static_argnames=("k", "iters", "use_pallas"))
-        self.np_rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
-        self.n_samples = np.array([c["n_train"] for c in clients_data], np.float32)
+        # _eval stays public-ish: eval_client(tr._eval, ...) is the
+        # per-client parity oracle used by tests and coordinator_bench
+        self._eval = jax.jit(make_eval_step(model))
+        self._veval = jax.jit(make_client_eval(model))
+        # the engine data already holds the device-resident val stack;
+        # seed the split cache so client_scores("val") reuses it
+        self._eval_splits: Dict[str, dict] = {"val": self.swarm_data.val}
         self.history: List[RoundLog] = []
+
+    # engine state passthroughs (the state pytree is the truth)
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def opt_state(self):
+        return self.state.opt_state
 
     # ---------------------------------------------------------------- local
     def _local_steps(self) -> int:
@@ -139,45 +126,15 @@ class SwarmTrainer:
         steps_per_epoch = int(np.ceil(self.n_samples.mean() / self.batch_size))
         return max(1, self.swarm.local_epochs * steps_per_epoch)
 
-    def local_train(self):
-        last = None
-        for _ in range(self._local_steps()):
-            xs, ys = [], []
-            for c in self.data:
-                X, y = c["train"]
-                xb, yb = _sample_batch(self.np_rng, X, y, self.batch_size)
-                xs.append(xb)
-                ys.append(yb)
-            batch = make_batch(self.cfg, np.stack(xs), np.stack(ys))
-            self.params, self.opt_state, metrics = self._vstep(
-                self.params, self.opt_state, batch, self.lr)
-            last = metrics
-        return float(jnp.mean(last["loss"])) if last else float("nan")
-
     # ----------------------------------------------------------------- eval
-    def _stacked_split(self, split: str, batch: int = 64) -> dict:
-        """Client-stacked eval data for one split, shaped
-        (N, n_batches, batch, ...): every client padded to the largest
-        client rounded up to the microbatch size, pad rows label=-1
-        (masked). Eval data is static, so the device-resident stack is
-        built once per split."""
-        if split not in self._eval_splits:
-            n_max = max(len(c[split][1]) for c in self.data)
-            n_to = -(-n_max // batch) * batch
-            Xs, ys = [], []
-            for c in self.data:
-                X, y = pad_eval_split(*c[split], n_to)
-                Xs.append(X.reshape((n_to // batch, batch) + X.shape[1:]))
-                ys.append(y.reshape((n_to // batch, batch) + y.shape[1:]))
-            self._eval_splits[split] = make_batch(
-                self.cfg, np.stack(Xs), np.stack(ys))
-        return self._eval_splits[split]
-
     def client_scores(self, split: str = "val") -> np.ndarray:
         """Per-client masked accuracy — ONE vmapped device program over
-        the client axis per split (was a per-client, per-batch host loop:
-        O(N * ceil(n/64)) dispatches per round)."""
-        scores = self._veval(self.params, self._stacked_split(split))
+        the client axis per split (eval data is static, so the
+        device-resident stack is built once per split)."""
+        if split not in self._eval_splits:
+            self._eval_splits[split] = stack_eval_split(self.cfg, self.data,
+                                                        split)
+        scores = self._veval(self.state.params, self._eval_splits[split])
         return np.asarray(scores, np.float32)
 
     def mean_accuracy(self, split: str = "test") -> float:
@@ -186,53 +143,37 @@ class SwarmTrainer:
 
     # ---------------------------------------------------------------- round
     def round(self, r: int, key) -> RoundLog:
-        train_loss = self.local_train()
-        val = self.client_scores("val")
-
-        if self.aggregation == "none":
-            log = RoundLog(r, float(val.mean()), np.zeros(self.n, np.int64),
-                           np.array([]), [], train_loss)
-            self.history.append(log)
-            return log
-
-        if self.aggregation == "fedavg":
-            assignments = np.zeros(self.n, np.int64)
-            centers = np.array([int(np.argmax(val))])
-            events = []
-            k = 1
-        else:
-            # --- BSO-SL: distribution upload -> k-means -> brain storm ---
-            # --- the coordinator phase is 3 device programs, not O(N·T):
-            # stats (one fused pass), k-means (one jit'd Lloyd loop),
-            # and the vmapped eval that produced `val` above
-            feats = swarm_distribution_matrix(self.params, self.n,
-                                              use_pallas=self.use_pallas)
-            k = self.swarm.n_clusters
-            _, assign0 = self._kmeans(key, feats, k=k,
-                                      iters=self.swarm.kmeans_iters,
-                                      use_pallas=self.use_pallas)
-            plan = brain_storm(self.np_rng, np.asarray(assign0), val, k,
-                               self.swarm.p1, self.swarm.p2)
-            assignments, centers, events = plan.assignments, plan.centers, plan.events
-
-        self.params = self._agg(self.params, jnp.asarray(assignments),
-                                jnp.asarray(self.n_samples), k=k)
-        if self.reset_opt_each_round:
-            # optional: re-init optimizer moments after redistribution
-            # (paper is silent; measured ablation in benchmarks)
-            self.opt_state = jax.vmap(self.opt.init)(self.params)
-        log = RoundLog(r, float(val.mean()), np.asarray(assignments),
-                       np.asarray(centers), events, train_loss)
+        """One protocol round == one engine program dispatch."""
+        # the engine donates its state buffers; copy the caller's key so
+        # their array survives the donation (keys are reusable here)
+        state = self.state._replace(key=jnp.copy(key))
+        self.state, m = jit_swarm_round(state, self.swarm_data,
+                                        self.engine_cfg)
+        log = _round_log(r, m)
         self.history.append(log)
         return log
 
     def fit(self, key, rounds: Optional[int] = None, verbose: bool = False):
         rounds = rounds or self.swarm.rounds
-        for r in range(rounds):
+        start = len(self.history)
+        for r in range(start, start + rounds):
             key, sub = jax.random.split(key)
             log = self.round(r, sub)
             if verbose:
                 print(f"[{self.aggregation}] round {r:3d} "
                       f"val_acc={log.mean_val_acc:.4f} loss={log.train_loss:.4f} "
                       + ("; ".join(log.events) if log.events else ""))
+        return self.history
+
+    def fit_scanned(self, key, rounds: Optional[int] = None):
+        """The same rounds as :meth:`fit`, but scanned into ONE device
+        program (``engine.run_rounds``) — no per-round host dispatch."""
+        rounds = rounds or self.swarm.rounds
+        state = self.state._replace(key=jnp.copy(key))
+        self.state, ms = jit_run_rounds(state, self.swarm_data,
+                                        self.engine_cfg, rounds)
+        start = len(self.history)
+        for i in range(rounds):
+            self.history.append(
+                _round_log(start + i, jax.tree.map(lambda x: x[i], ms)))
         return self.history

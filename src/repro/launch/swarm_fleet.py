@@ -1,77 +1,57 @@
-import os
-os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
-    " --xla_force_host_platform_device_count=512"
+"""Fleet-regime BSO-SL: the paper's protocol as a multi-pod collective
+program, lowered from the SAME round body as the sim regime
+(``repro.core.engine.make_fleet_round``).
 
-# Fleet-regime BSO-SL: the paper's protocol as a multi-pod collective
-# program. One swarm client per pod; within a pod the client's model is
-# FSDP/TP-sharded over (data, model). The round's communication:
-#
-#   * distribution-stat upload  -> tiny all_gather over "pod"
-#     (O(#tensors) floats — the paper's communication-efficiency claim
-#     as an ICI/DCN collective)
-#   * intra-cluster FedAvg Eq.2 -> cluster-masked psum over "pod"
-#     (client-to-client traffic, no server)
-#
-# The coordinator decisions (k-means + brain storm) stay host-side —
-# they are O(clients) and correspond to the paper's neighbour-assignment
-# server. This module lowers+compiles the fleet round step on the
-# 2x16x16 mesh — the beyond-paper "swarm-on-pods" dry-run artifact.
+One swarm client per pod; within a pod the client's model is FSDP/TP-
+sharded over (data, model). The round's communication:
 
+  * distribution-stat upload  -> computed INSIDE the round program
+    (``param_stats_batched`` under ``--pallas-stats``, the jnp oracle
+    otherwise) and returned as a tiny (clients, 2*#tensors) matrix —
+    the paper's communication-efficiency claim riding the same ICI/DCN
+    collective as the round step instead of a separate host pass
+  * intra-cluster FedAvg Eq.2 -> cluster-masked traffic over "pod"
+    (client-to-client, no server): ``cluster_fedavg`` segment-sum, with
+    XLA SPMD inserting the cross-pod collectives. (The explicit
+    masked-psum shard_map formulation in core.aggregation is the same
+    math and is exercised at unit scale in tests; XLA's partitioner
+    cannot yet mix manual "pod" collectives with auto-sharded gathers
+    at 512 devices — this is the one deliberate aggregation choice.)
+
+The coordinator decisions (k-means + brain storm) stay host-side — they
+are O(clients) on the uploaded stats and correspond to the paper's
+neighbour-assignment server. This module lowers+compiles the fleet
+round step on the 2x16x16 mesh — the beyond-paper "swarm-on-pods"
+dry-run artifact.
+"""
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.configs.base import INPUT_SHAPES, OptimizerConfig
-from repro.core.aggregation import cluster_psum_fedavg
+from repro.configs.base import OptimizerConfig
+from repro.core.engine import make_fleet_round
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
-from repro.models.model import input_specs
 from repro.optim.optimizers import make_optimizer
 from repro.sharding import build_param_specs, use_sharding
-from repro.train.steps import make_train_step
 
 
-def make_fleet_round(model, opt, k: int, n_local_steps: int = 1):
-    """Fleet round as a pure-jit program: vmap over the client (pod)
-    axis for local training, then Eq.2 cluster aggregation as a
-    segment-sum over clients. XLA SPMD inserts the cross-pod collectives
-    (the masked-psum shard_map formulation in core.aggregation is
-    exercised at unit scale; XLA's partitioner cannot yet mix manual
-    "pod" collectives with auto-sharded gathers at 512 devices)."""
-    step = make_train_step(model, opt)
-
-    def round_step(sparams, sopt, batch, lr, clusters, weights):
-        def local(p, o, b):
-            # slice a fresh microbatch per local step — training
-            # n_local_steps times on the identical batch is not SGD.
-            # ceil-sized microbatches with a clamped final start cover
-            # every row (indivisible batches overlap slightly at the
-            # tail instead of silently dropping rows).
-            n_b = jax.tree.leaves(b)[0].shape[0]
-            mb = min(n_b, -(-n_b // n_local_steps))
-
-            def one(i, carry):
-                pp, oo = carry
-                start = jnp.minimum(i * mb, n_b - mb)
-                bi = jax.tree.map(
-                    lambda x: jax.lax.dynamic_slice_in_dim(x, start, mb, 0), b)
-                pp, oo, _ = step(pp, oo, bi, lr)
-                return (pp, oo)
-            return jax.lax.fori_loop(0, n_local_steps, one, (p, o))
-
-        sparams, sopt = jax.vmap(local)(sparams, sopt, batch)
-        from repro.core.aggregation import cluster_fedavg
-        sparams = cluster_fedavg(sparams, clusters, weights, k)
-        return sparams, sopt
-
-    return round_step
+def force_host_device_count(n: int = 512):
+    """Opt into the n-device CPU stand-in. Deliberately NOT a module
+    side effect: only the CLI entrypoint calls this, so importing this
+    module (tests, examples) never poisons the process-wide backend.
+    Must run before jax initialises its backend to take effect."""
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+        f" --xla_force_host_platform_device_count={n}"
 
 
 def lower_fleet_round(arch_id: str = "granite-3-2b", k: int = 3,
-                      seq: int = 1024, per_client_batch: int = 16):
+                      seq: int = 1024, per_client_batch: int = 16,
+                      use_pallas_stats: bool = False):
     cfg = get_config(arch_id)
     import dataclasses
     cfg = dataclasses.replace(cfg, dtype="bfloat16", scan_layers=True,
@@ -96,7 +76,8 @@ def lower_fleet_round(arch_id: str = "granite-3-2b", k: int = 3,
     clusters_abs = jax.ShapeDtypeStruct((n_clients,), jnp.int32)
     weights_abs = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
 
-    round_step = make_fleet_round(model, opt, k)
+    round_step = make_fleet_round(model, opt, k,
+                                  use_pallas=use_pallas_stats)
 
     # inner (per-client) sharding must not consume the "pod" axis — that
     # is the client axis in the fleet regime
@@ -116,10 +97,13 @@ def lower_fleet_round(arch_id: str = "granite-3-2b", k: int = 3,
             lambda x: jax.sharding.NamedSharding(mesh, P("pod", "data")),
             batch_abs)
         rsh = jax.sharding.NamedSharding(mesh, P())
+        # the uploaded stats matrix is O(clients * #tensors) — sharded
+        # over the client axis like everything else in the round
+        ssh = jax.sharding.NamedSharding(mesh, P("pod"))
         lowered = jax.jit(
             round_step,
             in_shardings=(psh, osh, bsh, None, rsh, rsh),
-            out_shardings=(psh, osh),
+            out_shardings=(psh, osh, ssh),
         ).lower(sparams, sopt, batch_abs,
                 jax.ShapeDtypeStruct((), jnp.float32),
                 clusters_abs, weights_abs)
@@ -130,8 +114,14 @@ def lower_fleet_round(arch_id: str = "granite-3-2b", k: int = 3,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--pallas-stats", action="store_true",
+                    help="serve the in-round stat upload with the "
+                         "param_stats_batched kernel (TPU; CPU runs it "
+                         "in interpret mode)")
     args = ap.parse_args()
-    _, compiled = lower_fleet_round(args.arch)
+    force_host_device_count(512)
+    _, compiled = lower_fleet_round(args.arch,
+                                    use_pallas_stats=args.pallas_stats)
     mem = compiled.memory_analysis()
     print(f"[swarm-fleet] {args.arch} round step compiled on 2x16x16; "
           f"temp/dev={int(mem.temp_size_in_bytes)/2**30:.2f} GiB")

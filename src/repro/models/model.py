@@ -8,6 +8,7 @@ model-agnostic claim (RQ2) structural rather than incidental.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -70,6 +71,12 @@ def _lm_loss(fwd):
     return loss
 
 
+# cached on the (hashable, frozen) config: the constructor only closes
+# over cfg, and returning the SAME instance makes downstream jit caches
+# (notably the engine's one-program swarm_round, whose static
+# EngineConfig embeds the model) hash equal across callers instead of
+# recompiling per construction
+@functools.cache
 def build_model(cfg: ModelConfig) -> Model:
     if cfg.family == "cnn":
         def fwd(params, batch):

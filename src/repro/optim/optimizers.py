@@ -13,6 +13,7 @@ O(rows+cols) per matrix instead of O(rows*cols).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Callable
 
@@ -38,6 +39,11 @@ def _clip_by_global_norm(grads, max_norm):
     return jax.tree.map(lambda g: g * scale, grads)
 
 
+# cached on the frozen config: the closures are pure, and reusing the
+# instance lets the engine's static EngineConfig (which embeds the
+# optimizer) hash equal across trainers — one compiled round program
+# instead of one per construction
+@functools.cache
 def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
     if cfg.name == "sgd":
         return _sgd(cfg)

@@ -5,8 +5,13 @@
 # so the multi-device shard_map parity tests (e.g. cluster_fedavg vs
 # cluster_psum_fedavg) run instead of skipping. Extra args pass through
 # to pytest.
+#
+# Stage 1 is a fail-fast engine smoke: if the fused swarm_round program
+# can't compile and run two rounds, nothing downstream is worth the
+# full suite's wall time.
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
+python -m pytest -x -q tests/test_engine.py::test_engine_smoke
 exec python -m pytest -x -q "$@"

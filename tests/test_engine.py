@@ -1,0 +1,350 @@
+"""Engine tests: the functional SwarmState round program (PR 2).
+
+Covers the jax brain_storm port (shape invariants, numpy-oracle
+statistical parity, same-key determinism), on-device batch sampling,
+the single-jit'd-program property of swarm_round (compile/dispatch
+count), scan-over-rounds consistency, the host-loop trajectory parity,
+and the fleet round sharing the engine body with the stat upload
+folded in.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.bso import brain_storm, brain_storm_jax
+from repro.core.diststats import swarm_distribution_matrix
+from repro.core.engine import (EngineConfig, jit_run_rounds, jit_swarm_round,
+                               make_fleet_round, make_swarm_data,
+                               make_swarm_state, sample_local_batch,
+                               swarm_round)
+from repro.core.swarm import SwarmTrainer
+from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+
+SMALL_TABLE = np.maximum(TABLE_I // 16, (TABLE_I > 0).astype(np.int64) * 2)
+
+
+@pytest.fixture(scope="module")
+def dr_clients():
+    return make_dr_swarm_data(image_size=16, seed=0, table=SMALL_TABLE)
+
+
+@pytest.fixture(scope="module")
+def dr_model():
+    return build_model(get_config("squeezenet-dr"))
+
+
+def _engine_pieces(model, clients, *, local_steps=2, aggregation="bso",
+                   key=0):
+    """(state, data, cfg) for a tiny engine run. State is built fresh
+    per call — jit_swarm_round donates its buffers."""
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=2e-3))
+    cfg = EngineConfig(model=model, opt=opt, local_steps=local_steps,
+                       batch_size=8, lr=2e-3, aggregation=aggregation,
+                       n_clusters=3, p1=0.9, p2=0.8, kmeans_iters=10)
+    data = make_swarm_data(model.cfg, clients)
+    state = make_swarm_state(model, opt, clients, jax.random.PRNGKey(key))
+    return state, data, cfg
+
+
+# -------------------------------------------------------- brain_storm (jax)
+
+
+def test_brain_storm_jax_invariants_and_same_key_determinism():
+    """For any (p1, p2): post-swap assignments are the same multiset of
+    labels, every center is a member of its post-swap cluster, and the
+    same key reproduces the identical plan bit-for-bit."""
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        n, k = 14, 3
+        a0 = rng.integers(0, k, size=n).astype(np.int32)
+        val = rng.uniform(size=n).astype(np.float32)
+        p1, p2 = rng.uniform(), rng.uniform()
+        key = jax.random.PRNGKey(seed)
+        a, c, n_rep, n_swap = brain_storm_jax(key, a0, val, k, p1, p2)
+        a_np, c_np = np.asarray(a), np.asarray(c)
+        assert sorted(a_np.tolist()) == sorted(a0.tolist())
+        for cl in range(k):
+            if c_np[cl] >= 0:
+                assert a_np[c_np[cl]] == cl
+        a2, c2, n_rep2, n_swap2 = brain_storm_jax(key, a0, val, k, p1, p2)
+        np.testing.assert_array_equal(a_np, np.asarray(a2))
+        np.testing.assert_array_equal(c_np, np.asarray(c2))
+        assert int(n_rep) == int(n_rep2) and int(n_swap) == int(n_swap2)
+
+
+def test_brain_storm_jax_p1_p2_one_is_noop():
+    """p1 = p2 = 1.0 => r > p never fires: assignments untouched, zero
+    events, centers are the per-cluster best-validation members — the
+    same guarantee the numpy oracle makes."""
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        n, k = 14, 3
+        a0 = rng.integers(0, k, size=n).astype(np.int32)
+        val = rng.uniform(size=n).astype(np.float32)
+        a, c, n_rep, n_swap = brain_storm_jax(jax.random.PRNGKey(seed),
+                                              a0, val, k, 1.0, 1.0)
+        np.testing.assert_array_equal(np.asarray(a), a0)
+        assert int(n_rep) == 0 and int(n_swap) == 0
+        c_np = np.asarray(c)
+        for cl in range(k):
+            members = np.where(a0 == cl)[0]
+            if len(members):
+                assert c_np[cl] == members[np.argmax(val[members])]
+            else:
+                assert c_np[cl] == -1
+
+
+def test_brain_storm_jax_statistical_parity_with_numpy_oracle():
+    """The two implementations consume different RNG streams, so parity
+    is statistical: over many keys/seeds the replacement and swap event
+    rates must agree with the numpy oracle (and with the paper's
+    ~(1-p1) / ~(1-p2) per-cluster disruption rates)."""
+    jit_bs = jax.jit(brain_storm_jax, static_argnames=("k",))
+    trials, k = 1500, 3
+    reps_j = swaps_j = reps_n = swaps_n = 0
+    for s in range(trials):
+        rng = np.random.default_rng(s)
+        a0 = rng.integers(0, k, size=14)
+        val = rng.uniform(size=14).astype(np.float32)
+        _, _, n_rep, n_swap = jit_bs(jax.random.PRNGKey(s), a0, val,
+                                     k=k, p1=0.9, p2=0.8)
+        reps_j += int(n_rep)
+        swaps_j += int(n_swap)
+        plan = brain_storm(rng, a0.copy(), val, k, 0.9, 0.8)
+        reps_n += sum("replace" in e for e in plan.events)
+        swaps_n += sum("swap" in e for e in plan.events)
+    rep_j, rep_n = reps_j / (trials * k), reps_n / (trials * k)
+    swap_j, swap_n = swaps_j / (trials * k), swaps_n / (trials * k)
+    # ~0.1 minus no-op draws (new center == old center)
+    assert 0.05 < rep_j < 0.15, rep_j
+    assert abs(rep_j - rep_n) < 0.02, (rep_j, rep_n)
+    # ~0.2 per-cluster initiation rate
+    assert 0.10 < swap_j < 0.30, swap_j
+    assert abs(swap_j - swap_n) < 0.02, (swap_j, swap_n)
+
+
+# ------------------------------------------------------- on-device sampling
+
+
+def test_sample_local_batch_never_draws_padding(dr_clients, dr_model):
+    """Train sets are padded to the largest client with label=-1 poison
+    rows; the bounded on-device sampler must never surface one."""
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    # padding exists (clinic sizes are skewed) and is poisoned
+    assert int(jnp.min(data.train["labels"])) == -1
+    for s in range(50):
+        batch = sample_local_batch(jax.random.PRNGKey(s), data.train,
+                                   data.train_n, 8)
+        assert int(jnp.min(batch["labels"])) >= 0
+        assert batch["labels"].shape == (len(dr_clients), 8)
+
+
+def test_sample_local_batch_covers_each_clients_rows():
+    """Sampling is uniform per client over [0, n_i): every real row is
+    reachable (no off-by-one truncation) and no pad row ever is. Labels
+    are the row index, so the sampled values ARE the drawn indices."""
+    n_max, sizes = 10, [10, 3, 1]
+    labels = np.stack([np.where(np.arange(n_max) < n, np.arange(n_max), -1)
+                       for n in sizes]).astype(np.int32)
+    train = {"images": jnp.zeros((3, n_max, 2, 2, 3), jnp.float32),
+             "labels": jnp.asarray(labels)}
+    train_n = jnp.asarray(sizes, jnp.int32)
+    seen = [set() for _ in sizes]
+    for s in range(300):
+        batch = sample_local_batch(jax.random.PRNGKey(s), train, train_n, 4)
+        got = np.asarray(batch["labels"])
+        for i, n in enumerate(sizes):
+            assert got[i].min() >= 0 and got[i].max() < n
+            seen[i].update(got[i].tolist())
+    for i, n in enumerate(sizes):
+        assert seen[i] == set(range(n)), (i, seen[i])
+
+
+# -------------------------------------------------- single-program property
+
+
+def test_swarm_round_is_one_jitd_program(dr_clients, dr_model):
+    """The acceptance property: a full BSO round (local steps + eval +
+    stats + k-means + brain storm + Eq.2) lowers to ONE compiled XLA
+    executable, and repeated rounds hit the jit cache (compile count 1,
+    dispatch count 1 per round)."""
+    state, data, cfg = _engine_pieces(dr_model, dr_clients)
+
+    # one lowering == one device program for the entire round
+    lowered = jax.jit(swarm_round, static_argnames=("cfg",)).lower(
+        state, data, cfg)
+    compiled = lowered.compile()
+    s1, m1 = compiled(state, data)
+    assert np.isfinite(float(m1.mean_val_acc))
+    assert np.asarray(m1.assignments).shape == (len(dr_clients),)
+
+    # the module-level entry point: exactly one compile, then cache hits
+    n_before = jit_swarm_round._cache_size()
+    s, m = jit_swarm_round(state, data, cfg)
+    n_after_first = jit_swarm_round._cache_size()
+    assert n_after_first <= n_before + 1
+    for _ in range(3):
+        s, m = jit_swarm_round(s, data, cfg)
+    assert jit_swarm_round._cache_size() == n_after_first, \
+        "swarm_round recompiled across rounds"
+    assert int(s.round) == 4
+
+
+def test_run_rounds_scan_matches_roundwise_calls(dr_clients, dr_model):
+    """scan-over-rounds (one program for the whole fit) must reproduce
+    the per-round dispatch trajectory: same key chain, same params,
+    same metrics."""
+    rounds = 3
+    state_a, data, cfg = _engine_pieces(dr_model, dr_clients, key=3)
+    state_b = jax.tree.map(jnp.copy, state_a)
+
+    s, accs = state_a, []
+    for _ in range(rounds):
+        s, m = jit_swarm_round(s, data, cfg)
+        accs.append(float(m.mean_val_acc))
+
+    s_scan, ms = jit_run_rounds(state_b, data, cfg, rounds)
+    np.testing.assert_allclose(np.asarray(ms.mean_val_acc),
+                               np.asarray(accs, np.float32),
+                               rtol=1e-4, atol=1e-5)
+    assert int(s_scan.round) == int(s.round) == rounds
+    for a, b in zip(jax.tree.leaves(s.params), jax.tree.leaves(s_scan.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_engine_same_key_same_trajectory(dr_clients, dr_model):
+    """The engine is deterministic in its key: two trainers built and
+    fit with identical keys produce bitwise-identical histories."""
+    def run():
+        swarm = SwarmConfig(n_clients=len(dr_clients), n_clusters=3,
+                            rounds=2, local_steps=3)
+        tr = SwarmTrainer(dr_model, dr_clients, swarm,
+                          OptimizerConfig(name="adam", lr=2e-3),
+                          jax.random.PRNGKey(11), batch_size=8,
+                          aggregation="bso")
+        tr.fit(jax.random.PRNGKey(12))
+        return tr
+
+    a, b = run(), run()
+    for la, lb in zip(a.history, b.history):
+        assert la.mean_val_acc == lb.mean_val_acc
+        np.testing.assert_array_equal(la.assignments, lb.assignments)
+        np.testing.assert_array_equal(la.centers, lb.centers)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_engine_smoke(dr_clients, dr_model):
+    """Fast tier-1 smoke (also run standalone by test.sh): two engine
+    rounds produce finite, well-formed protocol artifacts."""
+    state, data, cfg = _engine_pieces(dr_model, dr_clients, local_steps=2)
+    state, m = jit_swarm_round(state, data, cfg)
+    state, m = jit_swarm_round(state, data, cfg)
+    assert np.isfinite(float(m.train_loss))
+    assert 0.0 <= float(m.mean_val_acc) <= 1.0
+    assert set(np.asarray(m.assignments).tolist()) <= {0, 1, 2}
+    assert np.asarray(m.centers).shape == (3,)
+    assert int(state.round) == 2
+
+
+# ------------------------------------------- host-loop trajectory parity
+
+
+def _host_loop_bso_fit(model, clients, *, rounds, local_steps, batch_size,
+                       lr, seed):
+    """Multi-round fit of the pre-engine host-driven round (PR 1
+    semantics) — the single reference implementation shared with the
+    fused-round benchmark. The engine must match this trajectory
+    statistically."""
+    from benchmarks.cluster_ablation import make_host_loop_round
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=lr))
+    round_fn = make_host_loop_round(model, opt, clients,
+                                    local_steps=local_steps,
+                                    batch_size=batch_size, lr=lr)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(clients))
+    params = jax.vmap(model.init)(keys)
+    opt_state = jax.vmap(opt.init)(params)
+    np_rng = np.random.default_rng(seed)
+    fit_key = jax.random.PRNGKey(seed + 1)
+    accs = []
+    for _ in range(rounds):
+        fit_key, sub = jax.random.split(fit_key)
+        params, opt_state, acc = round_fn(params, opt_state, sub, np_rng)
+        accs.append(acc)
+    return accs
+
+
+def test_engine_matches_host_loop_trajectory_statistically(dr_clients,
+                                                           dr_model):
+    """Acceptance: the fused engine round (jax brain storm + on-device
+    sampling) learns the same trajectory as the host-loop reference —
+    different RNG streams, so mean val-acc parity with tolerance, and
+    both clear the 5-class random floor."""
+    rounds, local_steps = 4, 10
+    host = _host_loop_bso_fit(dr_model, dr_clients, rounds=rounds,
+                              local_steps=local_steps, batch_size=8,
+                              lr=2e-3, seed=0)
+    swarm = SwarmConfig(n_clients=len(dr_clients), n_clusters=3,
+                        rounds=rounds, local_steps=local_steps)
+    tr = SwarmTrainer(dr_model, dr_clients, swarm,
+                      OptimizerConfig(name="adam", lr=2e-3),
+                      jax.random.PRNGKey(0), batch_size=8,
+                      aggregation="bso")
+    tr.fit(jax.random.PRNGKey(1))
+    engine = [l.mean_val_acc for l in tr.history]
+    # both learn past the 1/5 random floor by the end...
+    assert np.mean(host[-2:]) > 0.25, host
+    assert np.mean(engine[-2:]) > 0.25, engine
+    # ...and the settled halves of the trajectories agree
+    assert abs(np.mean(host[-2:]) - np.mean(engine[-2:])) < 0.2, \
+        (host, engine)
+
+
+# ------------------------------------------------------------ fleet sharing
+
+
+def test_fleet_round_folds_param_stats_into_program():
+    """make_fleet_round is built on the engine body: the distribution
+    stat upload happens INSIDE the compiled round step, the Pallas
+    param_stats_batched path matches the jnp oracle, and the whole
+    round is one lowered executable."""
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=1e-2))
+    n, B, S = 2, 4, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (n, B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    params = jax.vmap(model.init)(jax.random.split(jax.random.PRNGKey(0), n))
+    sopt = jax.vmap(opt.init)(params)
+    clusters = jnp.asarray([0, 1], jnp.int32)
+    weights = jnp.ones((n,), jnp.float32)
+    lr = jnp.float32(1e-2)
+
+    round_step = make_fleet_round(model, opt, k=2, n_local_steps=2)
+    # ONE compiled executable for local steps + stats + Eq.2
+    compiled = jax.jit(round_step).lower(params, sopt, batch, lr,
+                                         clusters, weights).compile()
+    out_p, _, stats = compiled(params, sopt, batch, lr, clusters, weights)
+    assert stats.shape[0] == n
+
+    # stats are the §III.B upload of the post-local-step params;
+    # singleton clusters make Eq.2 the identity, so check against the
+    # oracle on the returned params
+    expect = swarm_distribution_matrix(out_p, n)
+    np.testing.assert_allclose(np.asarray(stats), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+    # the param_stats_batched kernel path, folded into the same program
+    pallas_step = make_fleet_round(model, opt, k=2, n_local_steps=2,
+                                   use_pallas=True)
+    _, _, stats_pl = jax.jit(pallas_step)(params, sopt, batch, lr,
+                                          clusters, weights)
+    np.testing.assert_allclose(np.asarray(stats_pl), np.asarray(stats),
+                               rtol=1e-4, atol=1e-5)

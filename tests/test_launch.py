@@ -96,12 +96,14 @@ def test_run_single_descends():
 
 
 def test_fleet_round_trains_on_per_step_microbatches():
-    """Regression: the fleet-round fori_loop re-trained on the identical
-    batch every local step. With n_local_steps=2 the round must equal
-    two sequential steps on the batch's two *distinct* halves."""
+    """Regression: the fleet-round local loop re-trained on the
+    identical batch every local step. With n_local_steps=2 the round
+    must equal two sequential steps on the batch's two *distinct*
+    halves. (The fleet round is now built on the shared engine body and
+    additionally returns the in-program distribution-stat upload.)"""
     from repro.configs import get_config
     from repro.configs.base import OptimizerConfig
-    from repro.launch.swarm_fleet import make_fleet_round
+    from repro.core.engine import make_fleet_round
     from repro.models import build_model
     from repro.optim.optimizers import make_optimizer
     from repro.train.steps import make_train_step
@@ -118,9 +120,10 @@ def test_fleet_round_trains_on_per_step_microbatches():
     batch = {"tokens": toks, "labels": toks}
     sparams = jax.tree.map(lambda x: x[None], params)
     sopt = jax.vmap(opt.init)(sparams)
-    out_p, _ = jax.jit(round_step)(
+    out_p, _, stats = jax.jit(round_step)(
         sparams, sopt, batch, jnp.float32(1e-2),
         jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.float32))
+    assert stats.shape[0] == 1 and stats.ndim == 2
 
     step = make_train_step(model, opt)
     p, o = params, opt.init(params)
