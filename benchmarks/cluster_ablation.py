@@ -34,7 +34,7 @@ from repro.core.engine import (EngineConfig, jit_run_rounds, jit_swarm_round,
                                make_swarm_state, stack_eval_split)
 from repro.core.kmeans import kmeans
 from repro.core.swarm import SwarmTrainer, eval_client
-from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.data.dr import TABLE_I, make_dr_swarm_data, scale_table
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
 from repro.train.steps import make_train_step
@@ -50,9 +50,8 @@ CASES = [
 
 
 def run(data_scale: int = 2, rounds: int = 6, local_steps: int = 10, seed: int = 0):
-    table = np.maximum(TABLE_I // data_scale,
-                       (TABLE_I > 0).astype(np.int64) * 2)
-    clients = make_dr_swarm_data(image_size=20, seed=seed, table=table)
+    clients = make_dr_swarm_data(image_size=20, seed=seed,
+                                 table=scale_table(data_scale))
     model = build_model(get_config("squeezenet-dr"))
     out = {}
     for name, kw in CASES:
@@ -107,8 +106,8 @@ def coordinator_bench(n_clients: int = 64, seed: int = 0):
         f"programs=1;speedup={us_old / us_new:.1f}x")
 
     # --- eval + full round on an N-client swarm (clinics cycled to N)
-    table = np.maximum(TABLE_I // 8, (TABLE_I > 0).astype(np.int64) * 2)
-    clinics = make_dr_swarm_data(image_size=16, seed=seed, table=table)
+    clinics = make_dr_swarm_data(image_size=16, seed=seed,
+                                 table=scale_table(8))
     clients = [clinics[i % len(clinics)] for i in range(n_clients)]
     swarm = SwarmConfig(n_clients=n_clients, rounds=1, local_steps=1)
     tr = SwarmTrainer(model, clients, swarm,
@@ -193,9 +192,8 @@ def fused_round_bench(n_clients: int = 14, data_scale: int = 8,
 
     Writes ``BENCH_round.json`` with the three timings.
     """
-    table = np.maximum(TABLE_I // data_scale,
-                       (TABLE_I > 0).astype(np.int64) * 2)
-    clinics = make_dr_swarm_data(image_size=16, seed=seed, table=table)
+    clinics = make_dr_swarm_data(image_size=16, seed=seed,
+                                 table=scale_table(data_scale))
     clients = [clinics[i % len(clinics)] for i in range(n_clients)]
     model = build_model(get_config("squeezenet-dr"))
     opt = make_optimizer(OptimizerConfig(name="adam", lr=2e-3))
@@ -270,10 +268,17 @@ def fused_round_bench(n_clients: int = 14, data_scale: int = 8,
         "us_scanned_fit_per_round": us_scan_round,
         "fused_speedup": us_pr1 / us_fused,
         "scanned_speedup": us_pr1 / us_scan_round,
-        "note": "CPU-backend numbers: XLA CPU runs while-loop bodies "
-                "~2x slower than unrolled code, so the dispatch-count "
-                "collapse (not wall-clock) is the transferable win; "
-                "on TPU per-dispatch overhead dominates instead.",
+        "note": "CPU-backend numbers. scanned_speedup < 1 is an "
+                "XLA-CPU artifact, not a regression: the scanned fit "
+                "keeps its local phase as a rolled lax.scan inside the "
+                "rounds loop, and XLA's CPU backend executes ops in a "
+                "while-loop body ~2x slower than the same ops unrolled "
+                "(the single-round path unrolls via local_unroll, so "
+                "it dodges the penalty). The transferable win is the "
+                "dispatch-count collapse — one executable per fit — "
+                "which on TPU, where per-dispatch overhead dominates, "
+                "is also the wall-clock win. BENCH_sweep.json extends "
+                "the same collapse across the Table-II method axis.",
     }
     with open(out_json, "w") as f:
         json.dump(artifact, f, indent=2)

@@ -21,7 +21,20 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true",
                     help="smaller data scale for quick runs")
+    ap.add_argument("--quick", action="store_true",
+                    help="sweep smoke only: the Table-II method axis as "
+                         "one run_sweep program at --data-scale CPU size")
+    ap.add_argument("--data-scale", type=int, default=16,
+                    help="Table-I divisor for --quick/--fast runs")
     args = ap.parse_args()
+
+    if args.quick:
+        from benchmarks import table2_methods
+        print("name,us_per_call,derived")
+        table2_methods.run(data_scale=args.data_scale, rounds=2,
+                           local_steps=2, image_size=16,
+                           serial_reference=False)
+        return
 
     from benchmarks import (cluster_ablation, comm_scaling, kernel_bench,
                             roofline_report, table2_methods, table3_archs)
@@ -35,12 +48,13 @@ def main() -> None:
         "cluster_ablation": cluster_ablation.run,
     }
     if args.fast:
+        scale = args.data_scale
         suites["table2_methods"] = lambda: table2_methods.run(
-            data_scale=16, rounds=2, local_steps=4)
+            data_scale=scale, rounds=2, local_steps=4)
         suites["table3_archs"] = lambda: table3_archs.run(
-            data_scale=16, rounds=2, local_steps=4)
+            data_scale=scale, rounds=2, local_steps=4)
         suites["cluster_ablation"] = lambda: cluster_ablation.run(
-            data_scale=16, rounds=2, local_steps=4)
+            data_scale=scale, rounds=2, local_steps=4)
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -1,17 +1,23 @@
 """Paper Table III: BSO-SL with AlexNet / VGG / Inception / SqueezeNet
-local models — the model-agnostic sweep (RQ2)."""
+local models — the model-agnostic sweep (RQ2).
+
+Rebuilt on the sweep engine: one device-resident ``SwarmData`` is
+built once and shared by every architecture, and each arch's whole fit
+is ONE scanned ``run_method`` program (the serial slice of
+``run_sweep`` — the method axis itself can't batch across archs, whose
+param pytrees differ in shape).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import row
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig, SwarmConfig
-from repro.core.baselines import run_method
-from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.core.baselines import make_method_setup, run_method
+from repro.data.dr import make_dr_swarm_data, scale_table
 from repro.models import build_model
 
 ARCHS = ["alexnet-dr", "vgg-dr", "inception-dr", "squeezenet-dr"]
@@ -21,22 +27,25 @@ PAPER = {"alexnet-dr": 0.3703, "vgg-dr": 0.4016, "inception-dr": 0.4216,
 
 def run(data_scale: int = 1, rounds: int = 8, local_steps: int = 12,
         image_size: int = 20, seed: int = 0):
-    table = np.maximum(TABLE_I // data_scale,
-                       (TABLE_I > 0).astype(np.int64) * 2)
-    clients = make_dr_swarm_data(image_size=image_size, seed=seed, table=table)
+    clients = make_dr_swarm_data(image_size=image_size, seed=seed,
+                                 table=scale_table(data_scale))
     swarm = SwarmConfig(n_clients=14, n_clusters=3, rounds=rounds,
                         local_steps=local_steps)
     opt = OptimizerConfig(name="adam", lr=2e-3)
-    results = {}
+    results, data = {}, None
     for arch in ARCHS:
         model = build_model(get_config(arch))
+        cfg, data = make_method_setup(model, clients, swarm, opt,
+                                      batch_size=8, data=data)
         n = model.param_count(model.init(jax.random.PRNGKey(0)))
         t0 = time.time()
         acc, _ = run_method("bso-sl", model, clients, swarm, opt,
-                            jax.random.PRNGKey(seed), batch_size=8)
+                            jax.random.PRNGKey(seed), batch_size=8,
+                            cfg=cfg, data=data)
         results[arch] = acc
         row(f"table3/{arch}", (time.time() - t0) * 1e6,
-            f"acc={acc:.4f};paper_acc={PAPER[arch]:.4f};params={n}")
+            f"acc={acc:.4f};paper_acc={PAPER[arch]:.4f};params={n};"
+            f"programs=1")
     return results
 
 

@@ -24,12 +24,26 @@ def fedavg(params_list, n_samples):
     return tree_weighted_sum(params_list, w)
 
 
+def singleton_assignments(n: int):
+    """Assignments placing every client in its own cluster, which makes
+    :func:`cluster_fedavg` (with ``k >= n``) the *bitwise* identity:
+    each singleton's weight normalises to exactly ``w / w == 1.0`` and
+    its segment sum is a single float32 copy. This is how the sweep
+    engine expresses the paper's local-only baseline as the same
+    aggregation program as the other methods."""
+    return jnp.arange(n, dtype=jnp.int32)
+
+
 def cluster_fedavg(stacked_params, assignments, n_samples, k: int):
     """Eq. 2 within every cluster simultaneously.
 
     stacked_params: pytree with leading client axis N.
     assignments:    (N,) int cluster ids (post brain-storm).
     n_samples:      (N,) training set sizes |D_h|.
+    ``k`` only needs to upper-bound the labels in ``assignments``;
+    passing ``k = N`` with labels drawn from a smaller range computes
+    the same sums (the sweep engine does exactly this so one segment
+    layout serves every Table-II method).
     Returns the stacked pytree where client i holds its cluster's
     aggregated model (the redistribution step).
     """

@@ -1,29 +1,154 @@
-"""Table II baselines: centralized / local-only / FedAvg.
+"""Table II methods as thin slices of the sweep engine.
 
-local-only and FedAvg reuse SwarmTrainer (aggregation="none"/"fedavg");
-the centralized method pools every clinic's training data and trains a
-single model — the privacy-ignoring upper bound.
+Since the method-axis redesign, all four paper methods (centralized /
+local / FedAvg / BSO-SL) are parameterisations of the one fused round
+in :mod:`repro.core.engine` (:class:`~repro.core.engine.MethodParams`).
+This module is the host-facing surface over that axis:
+
+* :func:`run_method`  — ONE scanned ``run_rounds`` program for one
+  method's whole fit (the serial slice of the sweep; the parity
+  reference ``tests/test_sweep.py`` pins against ``run_sweep`` rows).
+* :func:`run_sweep_table` — the whole Table II axis as ONE vmapped
+  ``run_sweep`` program sharing a single device-resident
+  :class:`~repro.core.engine.SwarmData`.
+* :func:`train_centralized` — the original pooled-data host loop, kept
+  as the oracle for the engine's pooled-sampling centralized method.
+
+Note the centralized budget change: the old host loop scaled its step
+count by the number of clinics; the engine's centralized row rides the
+same (rounds x local_steps) grid as every other method — N replicas
+sampling the pooled dataset, averaged into one global model each round
+— so the axis is a controlled same-budget, same-data comparison (the
+property the SL-survey literature demands of Table II-style claims).
 """
 from __future__ import annotations
 
-from typing import List
+import functools
+from typing import List, NamedTuple, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, OptimizerConfig, SwarmConfig
-from repro.core.swarm import SwarmTrainer, eval_client, make_batch
+from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.engine import (EngineConfig, RoundMetrics, SWEEP_METHODS,
+                               SwarmData, SwarmState, jit_run_rounds,
+                               jit_run_sweep, make_client_eval,
+                               make_swarm_data, make_swarm_state,
+                               make_sweep_config, make_sweep_state,
+                               method_params, resolve_local_steps,
+                               stack_eval_split)
+from repro.core.swarm import eval_client, make_batch
 from repro.models.model import Model
 from repro.optim.optimizers import make_optimizer
 from repro.train.steps import make_eval_step, make_train_step
 
 
+def make_method_setup(model: Model, clients_data, swarm: SwarmConfig,
+                      opt_cfg: OptimizerConfig, *, batch_size: int = 16,
+                      lr=None, use_pallas: bool = False,
+                      cfg: EngineConfig = None, data: SwarmData = None):
+    """(EngineConfig, SwarmData) shared by every method/arch slice.
+    Existing ``cfg``/``data`` pass through untouched, so repeated
+    slices reuse one engine config (one compiled program) and one
+    device-resident dataset — the sweep's whole point (table3 shares
+    the data across architectures the same way)."""
+    if cfg is None:
+        opt = make_optimizer(opt_cfg)
+        cfg = EngineConfig(
+            model=model, opt=opt,
+            local_steps=resolve_local_steps(swarm, clients_data, batch_size),
+            batch_size=batch_size, lr=lr if lr is not None else opt_cfg.lr,
+            aggregation="bso", n_clusters=swarm.n_clusters, p1=swarm.p1,
+            p2=swarm.p2, kmeans_iters=swarm.kmeans_iters,
+            use_pallas=use_pallas)
+    if data is None:
+        data = make_swarm_data(model.cfg, clients_data)
+    return cfg, data
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_client_eval(model: Model):
+    return jax.jit(make_client_eval(model))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_sweep_eval(model: Model):
+    return jax.jit(jax.vmap(make_client_eval(model), in_axes=(0, None)))
+
+
+class MethodRun(NamedTuple):
+    """One finished fit: final state + the (rounds,)-stacked metrics
+    (method-stacked to (M, rounds) when produced by run_sweep_table)."""
+    state: SwarmState
+    metrics: RoundMetrics
+
+
+def sweep_keys(key, methods: Sequence[str] = SWEEP_METHODS):
+    """The per-method key schedule :func:`run_sweep_table` uses —
+    the one copy, so serial parity runs reproduce row m exactly."""
+    return jax.random.split(key, len(methods))
+
+
+def run_method(method: str, model: Model, clients_data, swarm: SwarmConfig,
+               opt_cfg: OptimizerConfig, key, *, batch_size: int = 16,
+               verbose: bool = False, cfg: EngineConfig = None,
+               data: SwarmData = None, test_stack=None):
+    """One Table-II row. method in {centralized, local, fedavg, bso-sl}.
+
+    The whole fit is ONE scanned device program
+    (``run_rounds(..., method_params(method, N))``); the returned
+    accuracy is Eq. 3 (mean per-client test accuracy) of the final
+    per-client models. Pass ``cfg``/``data``/``test_stack`` from a
+    previous call to share the device-resident dataset across slices.
+    Returns ``(acc, MethodRun)``.
+    """
+    cfg, data = make_method_setup(model, clients_data, swarm, opt_cfg,
+                                  batch_size=batch_size, cfg=cfg, data=data)
+    state = make_swarm_state(model, cfg.opt, clients_data, key)
+    state, ms = jit_run_rounds(state, data, cfg, swarm.rounds,
+                               method_params(method, len(clients_data)))
+    if verbose:
+        for r, acc in enumerate(np.asarray(ms.mean_val_acc)):
+            print(f"[{method}] round {r:3d} val_acc={acc:.4f}")
+    if test_stack is None:
+        test_stack = stack_eval_split(model.cfg, clients_data, "test")
+    acc = float(np.mean(_jit_client_eval(model)(state.params, test_stack)))
+    return acc, MethodRun(state, ms)
+
+
+def run_sweep_table(model: Model, clients_data, swarm: SwarmConfig,
+                    opt_cfg: OptimizerConfig, key, *,
+                    methods: Sequence[str] = SWEEP_METHODS,
+                    batch_size: int = 16, cfg: EngineConfig = None,
+                    data: SwarmData = None, test_stack=None):
+    """The whole Table II as ONE device program.
+
+    ``key`` is split once into per-method keys (:func:`sweep_keys` —
+    row m of the sweep is bitwise ``run_method(methods[m], ...,
+    keys[m])``). Returns ``(accs: {method: Eq.3 test acc}, MethodRun)``
+    where the MethodRun carries the (M,)-stacked final state and
+    (M, rounds) metrics.
+    """
+    cfg, data = make_method_setup(model, clients_data, swarm, opt_cfg,
+                                  batch_size=batch_size, cfg=cfg, data=data)
+    keys = sweep_keys(key, methods)
+    states = make_sweep_state(model, cfg.opt, clients_data, keys)
+    sweep = make_sweep_config(len(clients_data), methods)
+    states, ms = jit_run_sweep(states, data, cfg, sweep, swarm.rounds)
+    if test_stack is None:
+        test_stack = stack_eval_split(model.cfg, clients_data, "test")
+    scores = np.asarray(_jit_sweep_eval(model)(states.params, test_stack))
+    accs = {m: float(scores[i].mean()) for i, m in enumerate(methods)}
+    return accs, MethodRun(states, ms)
+
+
 def train_centralized(model: Model, clients_data: List[dict],
                       opt_cfg: OptimizerConfig, key, *, steps: int,
                       batch_size: int = 32, lr=None):
-    """Returns (params, per-client mean test accuracy — Eq. 3 applied to
-    the single global model)."""
+    """Host-loop pooled-data training — the oracle the engine's
+    pooled-sampling centralized method miniaturises. Returns
+    (params, per-client mean test accuracy — Eq. 3 applied to the
+    single global model)."""
     X = np.concatenate([c["train"][0] for c in clients_data])
     y = np.concatenate([c["train"][1] for c in clients_data])
     rng = np.random.default_rng(0)
@@ -43,21 +168,3 @@ def train_centralized(model: Model, clients_data: List[dict],
     accs = [eval_client(eval_fn, model.cfg, params, *c["test"])
             for c in clients_data]
     return params, float(np.mean(accs))
-
-
-def run_method(method: str, model: Model, clients_data, swarm: SwarmConfig,
-               opt_cfg: OptimizerConfig, key, *, batch_size: int = 16,
-               verbose: bool = False):
-    """One Table-II row. method in {centralized, local, fedavg, bso-sl}."""
-    if method == "centralized":
-        steps = swarm.rounds * max(1, swarm.local_epochs) * \
-            int(np.ceil(np.mean([c["n_train"] for c in clients_data]) / batch_size)) \
-            * len(clients_data)
-        _, acc = train_centralized(model, clients_data, opt_cfg, key,
-                                   steps=steps, batch_size=batch_size)
-        return acc, None
-    agg = {"local": "none", "fedavg": "fedavg", "bso-sl": "bso"}[method]
-    tr = SwarmTrainer(model, clients_data, swarm, opt_cfg, key,
-                      batch_size=batch_size, aggregation=agg)
-    tr.fit(key, verbose=verbose)
-    return tr.mean_accuracy("test"), tr

@@ -24,6 +24,24 @@ Both regimes share this body:
   only the O(clients) coordinator decision (k-means + brain storm)
   arrives from the host, matching the paper's neighbour-assignment
   server (see ``repro/launch/swarm_fleet.py``).
+
+The round also carries a **method axis** (paper Table II): the four
+comparison methods are parameterisations of this one body, realised as
+the traced :class:`MethodParams` masks —
+
+* ``centralized``  — every client samples the pooled global dataset
+  (the "1 merged client" upper bound, batched over N replicas) and
+  aggregates into one global model each round,
+* ``local``        — singleton clusters: Eq. 2 is the bitwise identity,
+* ``fedavg``       — one global cluster, no coordinator decision,
+* ``bso-sl``       — the full k-means + brain-storm path.
+
+Because the differences are traced data (a pooling flag and a fallback
+assignment vector), ONE compiled program serves the whole axis:
+:func:`run_sweep` vmaps :func:`run_rounds` over stacked
+:class:`MethodParams` + per-method :class:`SwarmState`, sharing a
+single device-resident :class:`SwarmData` — the paper's Table II grid
+(4 methods x rounds programs) collapses to one executable.
 """
 from __future__ import annotations
 
@@ -34,8 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core.aggregation import cluster_fedavg
+from repro.configs.base import ModelConfig, SwarmConfig
+from repro.core.aggregation import cluster_fedavg, singleton_assignments
 from repro.core.bso import brain_storm_jax
 from repro.core.diststats import swarm_distribution_matrix
 from repro.core.kmeans import kmeans
@@ -84,6 +102,54 @@ class RoundMetrics(NamedTuple):
     n_swapped: Any                   # () int32 BSA swap events
 
 
+class MethodParams(NamedTuple):
+    """Traced per-method knobs — the Table-II method axis as data.
+
+    Every field is a jax array (no python branches), so the four paper
+    methods trace to the SAME program and :func:`run_sweep` can vmap
+    over a stacked instance. ``base_assign`` is the aggregation plan
+    used when the coordinator is masked off; the segment count is
+    always N (see :func:`~repro.core.aggregation.cluster_fedavg`).
+    """
+    pool_data: Any        # () bool — sample minibatches from the pooled
+                          #           global dataset (centralized)
+    use_coord: Any        # () bool — take the k-means + brain-storm
+                          #           assignments (bso-sl)
+    base_assign: Any      # (N,) int32 — assignments when not use_coord:
+                          #           arange(N) local, zeros fedavg/centr.
+
+
+#: Paper Table II method axis, in table order.
+SWEEP_METHODS = ("centralized", "local", "fedavg", "bso-sl")
+
+
+def method_params(method: str, n_clients: int) -> MethodParams:
+    """The :class:`MethodParams` row realising one paper method.
+
+    The axis is a *controlled same-budget* comparison: every method —
+    centralized included — runs the same (rounds x local_steps x
+    batch) grid. The paper's centralized number relied on a step count
+    scaled by the clinic count; ``baselines.train_centralized`` keeps
+    that paper-budget oracle for reference (table2 reports both).
+    """
+    if method not in SWEEP_METHODS:
+        raise ValueError(f"unknown method {method!r}; one of {SWEEP_METHODS}")
+    zeros = jnp.zeros((n_clients,), jnp.int32)
+    return MethodParams(
+        pool_data=jnp.asarray(method == "centralized"),
+        use_coord=jnp.asarray(method == "bso-sl"),
+        base_assign=singleton_assignments(n_clients) if method == "local"
+        else zeros)
+
+
+def make_sweep_config(n_clients: int,
+                      methods=SWEEP_METHODS) -> MethodParams:
+    """Stacked :class:`MethodParams` with a leading (M,) method axis —
+    the ``SweepConfig`` that :func:`run_sweep` vmaps over."""
+    rows = [method_params(m, n_clients) for m in methods]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     """Static round configuration (hashable — a jit static argument).
@@ -106,6 +172,18 @@ class EngineConfig:
     reset_opt_each_round: bool = False
     local_unroll: int = 1            # scan unroll of the local phase
                                      # (CPU wants local_steps, TPU 1)
+
+
+def resolve_local_steps(swarm: SwarmConfig, clients_data,
+                        batch_size: int) -> int:
+    """The per-round local step count: explicit ``swarm.local_steps``,
+    else ``local_epochs`` over the mean clinic size — ONE copy of the
+    rule, shared by SwarmTrainer and the baselines' engine slices so
+    the two can never silently diverge."""
+    if swarm.local_steps is not None:
+        return swarm.local_steps
+    mean_n = float(np.mean([c["n_train"] for c in clients_data]))
+    return max(1, swarm.local_epochs * int(np.ceil(mean_n / batch_size)))
 
 
 # --------------------------------------------------------------- data layout
@@ -177,6 +255,17 @@ def make_swarm_state(model: Model, opt: Optimizer, clients_data,
                       round=jnp.zeros((), jnp.int32), n_samples=n_samples)
 
 
+def make_sweep_state(model: Model, opt: Optimizer, clients_data,
+                     keys) -> SwarmState:
+    """Method-stacked :class:`SwarmState`: row m is exactly the state
+    :func:`make_swarm_state` builds from ``keys[m]``, so a sweep row
+    and a serial :func:`run_rounds` call seeded with the same key share
+    one PRNG chain (the parity property ``tests/test_sweep.py`` pins).
+    """
+    states = [make_swarm_state(model, opt, clients_data, k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
 # -------------------------------------------------------------- round pieces
 
 
@@ -188,6 +277,34 @@ def sample_local_batch(key, train, train_n, batch_size: int):
     idx = jax.random.randint(key, (N, batch_size), 0, train_n[:, None])
     return jax.tree.map(
         lambda x: jax.vmap(lambda a, i: a[i])(x, idx), train)
+
+
+def sample_swarm_batch(key, train, train_n, batch_size: int, pool):
+    """Method-axis minibatch sampler: ``pool`` (a traced () bool)
+    selects between the per-client draw and the pooled-global draw
+    inside one program.
+
+    * pool off — the exact draw :func:`sample_local_batch` makes (same
+      key, same randint call), so non-centralized sweep rows sample
+      bitwise-identical batches to the plain engine path.
+    * pool on — every client's slot draws a uniform *global* row id in
+      [0, sum(train_n)) (a fold_in'd key keeps the stream disjoint) and
+      maps it to (client, row) via the cumulative client sizes: the
+      centralized method's "merged client", N replicas wide. Pad rows
+      stay unreachable in both branches.
+    """
+    N = train_n.shape[0]
+    own_row = jax.random.randint(key, (N, batch_size), 0, train_n[:, None])
+    own_client = jnp.broadcast_to(
+        jnp.arange(N, dtype=jnp.int32)[:, None], (N, batch_size))
+    cum = jnp.cumsum(train_n)
+    g = jax.random.randint(jax.random.fold_in(key, 1), (N, batch_size),
+                           0, cum[-1])
+    pool_client = jnp.searchsorted(cum, g, side="right").astype(jnp.int32)
+    pool_row = g - (cum[pool_client] - train_n[pool_client])
+    client = jnp.where(pool, pool_client, own_client)
+    row = jnp.where(pool, pool_row, own_row)
+    return jax.tree.map(lambda x: x[client, row], train)
 
 
 def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
@@ -240,24 +357,37 @@ def make_client_eval(model: Model):
 
 
 def swarm_round(state: SwarmState, data: SwarmData,
-                cfg: EngineConfig):
+                cfg: EngineConfig, method: MethodParams = None):
     """One full BSO-SL round as a pure function — local steps, eval,
     distribution upload, k-means, brain storm, Eq. 2 aggregation.
 
     Jit it with ``cfg`` static (see :data:`jit_swarm_round`) and the
     entire round is one device program; scan it (:func:`run_rounds`)
-    and a whole training run is one program."""
+    and a whole training run is one program.
+
+    ``method`` switches the body onto the Table-II method axis: the
+    coordinator (stats + k-means + brain storm) always runs, but the
+    traced masks pick which assignments aggregate and whether sampling
+    pools — so the one lowered program is vmappable over stacked
+    :class:`MethodParams` (:func:`run_sweep`). With ``method=None`` the
+    static ``cfg.aggregation`` branches keep the leaner single-method
+    programs (``none`` skips the coordinator entirely)."""
     model, opt = cfg.model, cfg.opt
     step = make_train_step(model, opt)
     next_key, k_local, k_kmeans, k_bso = jax.random.split(state.key, 4)
 
     # --- local phase: cfg.local_steps of on-device-sampled SGD
     sample_keys = jax.random.split(k_local, cfg.local_steps)
+    if method is None:
+        batch_for_step = lambda kt: sample_local_batch(
+            kt, data.train, data.train_n, cfg.batch_size)
+    else:
+        batch_for_step = lambda kt: sample_swarm_batch(
+            kt, data.train, data.train_n, cfg.batch_size,
+            method.pool_data)
     params, opt_state, losses = local_phase(
         step, state.params, state.opt_state, cfg.lr, sample_keys,
-        lambda kt: sample_local_batch(kt, data.train, data.train_n,
-                                      cfg.batch_size),
-        unroll=cfg.local_unroll)
+        batch_for_step, unroll=cfg.local_unroll)
     train_loss = losses[-1]
 
     # --- eval: per-client val accuracy (shared within clusters, §III.C)
@@ -266,7 +396,26 @@ def swarm_round(state: SwarmState, data: SwarmData,
     # --- coordinator + aggregation
     N = data.train_n.shape[0]
     zero = jnp.zeros((), jnp.int32)
-    if cfg.aggregation == "none":
+    if method is not None:
+        # the method axis: one program, per-method traced masks. The
+        # aggregation segment count is N so every base_assign plan
+        # (arange = identity, zeros = global) shares the bso layout.
+        k = cfg.n_clusters
+        assert k <= N, "method axis needs n_clusters <= n_clients"
+        feats = swarm_distribution_matrix(params, use_pallas=cfg.use_pallas)
+        _, a0 = kmeans(k_kmeans, feats, k=k, iters=cfg.kmeans_iters,
+                       use_pallas=cfg.use_pallas)
+        bsa_a, bsa_c, n_rep, n_swap = brain_storm_jax(
+            k_bso, a0, val, k, cfg.p1, cfg.p2)
+        use = method.use_coord
+        assignments = jnp.where(use, bsa_a, method.base_assign)
+        centers = jnp.where(use, bsa_c, -1)
+        n_rep = jnp.where(use, n_rep, zero)
+        n_swap = jnp.where(use, n_swap, zero)
+        params = cluster_fedavg(params, assignments, state.n_samples, k=N)
+        if cfg.reset_opt_each_round:
+            opt_state = jax.vmap(opt.init)(params)
+    elif cfg.aggregation == "none":
         assignments = jnp.zeros((N,), jnp.int32)
         centers = jnp.zeros((0,), jnp.int32)
         n_rep = n_swap = zero
@@ -298,13 +447,32 @@ def swarm_round(state: SwarmState, data: SwarmData,
 
 
 def run_rounds(state: SwarmState, data: SwarmData, cfg: EngineConfig,
-               rounds: int):
+               rounds: int, method: MethodParams = None):
     """Scan :func:`swarm_round` over ``rounds``: the whole multi-round
-    fit as ONE device program. Metrics gain a leading (rounds,) axis."""
+    fit as ONE device program. Metrics gain a leading (rounds,) axis.
+    ``method`` threads the Table-II method axis through every round."""
     def body(s, _):
-        return swarm_round(s, data, cfg)
+        return swarm_round(s, data, cfg, method)
 
     return jax.lax.scan(body, state, None, length=rounds)
+
+
+def run_sweep(state: SwarmState, data: SwarmData, cfg: EngineConfig,
+              sweep: MethodParams, rounds: int):
+    """The whole paper-table sweep as ONE device program.
+
+    ``state`` is method-stacked (:func:`make_sweep_state`), ``sweep``
+    is the stacked :class:`MethodParams` (:func:`make_sweep_config`);
+    both carry a leading (M,) axis. The single :class:`SwarmData` is
+    closed over un-vmapped, so every method reads the same device
+    buffers. Row m is exactly ``run_rounds(state[m], data, cfg,
+    rounds, sweep[m])`` — the parity contract ``tests/test_sweep.py``
+    asserts against the serial ``run_method`` slice.
+    """
+    def one(s, m):
+        return run_rounds(s, data, cfg, rounds, m)
+
+    return jax.vmap(one)(state, sweep)
 
 
 # module-level jitted entry points: the cache is shared across every
@@ -314,6 +482,8 @@ jit_swarm_round = jax.jit(swarm_round, static_argnames=("cfg",),
                           donate_argnums=(0,))
 jit_run_rounds = jax.jit(run_rounds, static_argnames=("cfg", "rounds"),
                          donate_argnums=(0,))
+jit_run_sweep = jax.jit(run_sweep, static_argnames=("cfg", "rounds"),
+                        donate_argnums=(0,))
 
 
 # ------------------------------------------------------------- fleet regime

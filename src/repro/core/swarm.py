@@ -34,7 +34,7 @@ from repro.core.engine import (EngineConfig, RoundMetrics, SwarmState,
                                jit_run_rounds, jit_swarm_round,
                                make_batch, make_client_eval, make_swarm_data,
                                make_swarm_state, pad_eval_split,
-                               stack_eval_split)
+                               resolve_local_steps, stack_eval_split)
 from repro.models.model import Model
 from repro.optim.optimizers import make_optimizer
 from repro.train.steps import make_eval_step
@@ -121,10 +121,7 @@ class SwarmTrainer:
 
     # ---------------------------------------------------------------- local
     def _local_steps(self) -> int:
-        if self.swarm.local_steps is not None:
-            return self.swarm.local_steps
-        steps_per_epoch = int(np.ceil(self.n_samples.mean() / self.batch_size))
-        return max(1, self.swarm.local_epochs * steps_per_epoch)
+        return resolve_local_steps(self.swarm, self.data, self.batch_size)
 
     # ----------------------------------------------------------------- eval
     def client_scores(self, split: str = "val") -> np.ndarray:
@@ -154,11 +151,19 @@ class SwarmTrainer:
         return log
 
     def fit(self, key, rounds: Optional[int] = None, verbose: bool = False):
+        """Round-by-round fit on ONE key schedule: the caller's key
+        seeds the engine chain once and every round's keys derive
+        in-program from the carried state key — the identical schedule
+        :meth:`fit_scanned`'s scan advances, so the two are bitwise
+        interchangeable (``tests/test_sweep.py`` pins this)."""
         rounds = rounds or self.swarm.rounds
+        self.state = self.state._replace(key=jnp.copy(jnp.asarray(key)))
         start = len(self.history)
         for r in range(start, start + rounds):
-            key, sub = jax.random.split(key)
-            log = self.round(r, sub)
+            self.state, m = jit_swarm_round(self.state, self.swarm_data,
+                                            self.engine_cfg)
+            log = _round_log(r, m)
+            self.history.append(log)
             if verbose:
                 print(f"[{self.aggregation}] round {r:3d} "
                       f"val_acc={log.mean_val_acc:.4f} loss={log.train_loss:.4f} "

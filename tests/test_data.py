@@ -1,7 +1,10 @@
 """Data pipeline: Table-I exactness, splits, determinism, non-IID."""
-import numpy as np
+import warnings
 
-from repro.data.dr import TABLE_I, make_dr_swarm_data
+import numpy as np
+import pytest
+
+from repro.data.dr import TABLE_I, make_dr_swarm_data, scale_table
 from repro.data.tokens import make_token_swarm_data, sample_tokens
 
 
@@ -17,6 +20,34 @@ def test_table_1_matches_paper():
     assert TABLE_I[2, 3] == 0        # C4 has no Moderate
     assert TABLE_I[2, 13] == 0       # C14 has no Moderate
     assert TABLE_I[0, 2] == 901      # C3 NoDR-heavy
+
+
+def test_scale_table_minimum_counts_clamp_and_warn():
+    """Large --data-scale must clamp (never drop) nonzero cells, keep
+    zero cells zero, and WARN that the floor distorts class balance —
+    the silent-distortion fix for the table benchmarks."""
+    with pytest.warns(RuntimeWarning, match="min_count"):
+        t = scale_table(64)
+    assert (t[TABLE_I > 0] >= 2).all()
+    assert (t[TABLE_I == 0] == 0).all()
+    # the un-clamped region still scales
+    big = TABLE_I >= 128
+    assert (t[big] == TABLE_I[big] // 64).all()
+
+    # scale 1 is Table I exactly, silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        np.testing.assert_array_equal(scale_table(1), TABLE_I)
+
+    with pytest.raises(ValueError):
+        scale_table(0)
+
+    # the floored table still yields well-formed clinics: every split
+    # non-empty even where a clinic's total is a handful of rows
+    clinics = make_dr_swarm_data(image_size=8, seed=0, table=t)
+    for clinic in clinics:
+        assert clinic["n_train"] >= 1
+        assert len(clinic["val"][1]) >= 1 and len(clinic["test"][1]) >= 1
 
 
 def test_dr_dataset_counts_and_splits():

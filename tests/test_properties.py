@@ -8,7 +8,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import cluster_fedavg, fedavg
-from repro.core.bso import brain_storm
+from repro.core.bso import brain_storm, brain_storm_jax
 from repro.core.kmeans import assign, kmeans
 from repro.kernels import ops, ref
 
@@ -90,6 +90,82 @@ def test_brain_storm_invariants(seed, p1, p2, n, k):
     for c in range(k):
         if plan.centers[c] >= 0:
             assert plan.assignments[plan.centers[c]] == c
+
+
+def _bsa_case(seed, n, k):
+    rng = np.random.default_rng(seed)
+    return (rng, rng.integers(0, k, size=n).astype(np.int32),
+            rng.uniform(size=n).astype(np.float32))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(5, 24), st.integers(2, 5),
+       st.floats(0, 1), st.floats(0, 1))
+def test_brain_storm_jax_oracle_shared_invariants(seed, n, k, p1, p2):
+    """For any (p1, p2, k, key): both implementations preserve the
+    cluster-membership multiset, keep every center a member of its
+    post-swap cluster, and bound event counts by the occupied-cluster
+    count (each cluster initiates at most one replace and one swap)."""
+    rng, a0, val = _bsa_case(seed, n, k)
+    n_occ = len(np.unique(a0))
+
+    a, c, n_rep, n_swap = brain_storm_jax(jax.random.PRNGKey(seed),
+                                          a0, val, k, p1, p2)
+    a, c = np.asarray(a), np.asarray(c)
+    assert sorted(a.tolist()) == sorted(a0.tolist())
+    for cl in range(k):
+        if c[cl] >= 0:
+            assert a[c[cl]] == cl
+    assert 0 <= int(n_rep) <= n_occ
+    assert 0 <= int(n_swap) <= n_occ
+
+    plan = brain_storm(rng, a0.copy(), val, k, p1, p2)
+    assert sorted(plan.assignments.tolist()) == sorted(a0.tolist())
+    for cl in range(k):
+        if plan.centers[cl] >= 0:
+            assert plan.assignments[plan.centers[cl]] == cl
+    assert sum("replace" in e for e in plan.events) <= n_occ
+    assert sum("swap" in e for e in plan.events) <= n_occ
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(5, 24), st.integers(2, 5))
+def test_brain_storm_p_one_edge_is_deterministic_noop(seed, n, k):
+    """p1 = p2 = 1: r > p never fires, so BOTH implementations are
+    deterministic and must agree exactly — assignments untouched,
+    centers = per-cluster best-validation member, zero events."""
+    rng, a0, val = _bsa_case(seed, n, k)
+    a, c, n_rep, n_swap = brain_storm_jax(jax.random.PRNGKey(seed),
+                                          a0, val, k, 1.0, 1.0)
+    plan = brain_storm(rng, a0.copy(), val, k, 1.0, 1.0)
+    np.testing.assert_array_equal(np.asarray(a), a0)
+    np.testing.assert_array_equal(plan.assignments, a0)
+    np.testing.assert_array_equal(np.asarray(c), plan.centers)
+    assert int(n_rep) == 0 and int(n_swap) == 0 and plan.events == []
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(5, 24), st.integers(2, 5))
+def test_brain_storm_p_zero_edge_always_fires(seed, n, k):
+    """p1 = p2 = 0: every occupied cluster replaces its center with a
+    random member and initiates a swap (when >= 2 clusters are
+    occupied) — in both implementations. The invariants must survive
+    maximum disruption."""
+    rng, a0, val = _bsa_case(seed, n, k)
+    n_occ = len(np.unique(a0))
+
+    a, c, n_rep, n_swap = brain_storm_jax(jax.random.PRNGKey(seed),
+                                          a0, val, k, 0.0, 0.0)
+    a, c = np.asarray(a), np.asarray(c)
+    assert sorted(a.tolist()) == sorted(a0.tolist())
+    for cl in range(k):
+        if c[cl] >= 0:
+            assert a[c[cl]] == cl
+    assert int(n_swap) == (n_occ if n_occ > 1 else 0)
+
+    plan = brain_storm(rng, a0.copy(), val, k, 0.0, 0.0)
+    n_swaps_np = sum("swap" in e for e in plan.events)
+    assert n_swaps_np == (n_occ if n_occ > 1 else 0)
+    for cl in range(k):
+        if plan.centers[cl] >= 0:
+            assert plan.assignments[plan.centers[cl]] == cl
 
 
 # ------------------------------------------------------------------ kernels

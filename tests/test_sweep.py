@@ -1,0 +1,225 @@
+"""Sweep-engine parity/property harness (PR 3).
+
+Locks down the Table-II method axis: the vmapped ``run_sweep`` program
+must reproduce each serial ``run_method`` slice bit-for-bit (same PRNG
+keys), the method rows must match the plain static-branch engine
+paths, the pooled sampler must cover exactly the real global rows, and
+the unified fit key schedule must make ``fit``/``fit_scanned``
+bitwise interchangeable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.baselines import (make_method_setup, run_method,
+                                  run_sweep_table, sweep_keys)
+from repro.core.engine import (EngineConfig, SWEEP_METHODS, jit_run_rounds,
+                               jit_run_sweep, make_swarm_data,
+                               make_swarm_state, make_sweep_config,
+                               make_sweep_state, method_params, run_sweep,
+                               sample_local_batch, sample_swarm_batch)
+from repro.core.swarm import SwarmTrainer
+from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+
+SMALL_TABLE = np.maximum(TABLE_I // 16, (TABLE_I > 0).astype(np.int64) * 2)
+N = TABLE_I.shape[1]
+
+
+@pytest.fixture(scope="module")
+def dr_clients():
+    return make_dr_swarm_data(image_size=16, seed=0, table=SMALL_TABLE)
+
+
+@pytest.fixture(scope="module")
+def dr_model():
+    return build_model(get_config("squeezenet-dr"))
+
+
+def _swarm(rounds=2, local_steps=2):
+    return SwarmConfig(n_clients=N, n_clusters=3, rounds=rounds,
+                       local_steps=local_steps, kmeans_iters=10)
+
+
+OPT = OptimizerConfig(name="adam", lr=2e-3)
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ----------------------------------------------------- one-program property
+
+
+def test_sweep_smoke_one_program(dr_clients, dr_model):
+    """Fail-fast stage for test.sh: 2 rounds x 4 methods lower to ONE
+    executable, run, and produce finite well-formed metrics; repeated
+    sweeps hit the jit cache."""
+    swarm = _swarm()
+    cfg, data = make_method_setup(dr_model, dr_clients, swarm, OPT,
+                                  batch_size=8)
+    keys = jax.random.split(jax.random.PRNGKey(0), len(SWEEP_METHODS))
+    states = make_sweep_state(dr_model, cfg.opt, dr_clients, keys)
+    sweep = make_sweep_config(N)
+
+    # one lowering == one device program for the whole 4-method fit
+    lowered = jax.jit(run_sweep, static_argnames=("cfg", "rounds")).lower(
+        states, data, cfg, sweep, 2)
+    compiled = lowered.compile()
+    s, ms = compiled(states, data, sweep)
+
+    M, R = len(SWEEP_METHODS), 2
+    assert np.asarray(ms.mean_val_acc).shape == (M, R)
+    assert np.isfinite(np.asarray(ms.mean_val_acc)).all()
+    assert np.isfinite(np.asarray(ms.train_loss)).all()
+    assert np.asarray(ms.assignments).shape == (M, R, N)
+    assert (np.asarray(s.round) == R).all()
+
+    # module-level entry point: at most one compile, then cache hits
+    states = make_sweep_state(dr_model, cfg.opt, dr_clients, keys)
+    n0 = jit_run_sweep._cache_size()
+    s2, _ = jit_run_sweep(states, data, cfg, sweep, 2)
+    n1 = jit_run_sweep._cache_size()
+    assert n1 <= n0 + 1
+    s2 = jax.tree.map(jnp.copy, s2)
+    jit_run_sweep(s2, data, cfg, sweep, 2)
+    assert jit_run_sweep._cache_size() == n1, "run_sweep recompiled"
+
+
+# ------------------------------------------------- sweep vs serial parity
+
+
+def test_sweep_rows_match_serial_run_method(dr_clients, dr_model):
+    """The parity contract: row m of one vmapped run_sweep program ==
+    the serial run_method slice seeded with the same key — allclose
+    per-round accuracies, bitwise-equal final params (every method is
+    deterministic in its key)."""
+    swarm = _swarm(rounds=2, local_steps=2)
+    cfg, data = make_method_setup(dr_model, dr_clients, swarm, OPT,
+                                  batch_size=8)
+    key = jax.random.PRNGKey(42)
+    accs, sweep_run = run_sweep_table(dr_model, dr_clients, swarm, OPT, key,
+                                      batch_size=8, cfg=cfg, data=data)
+    keys = sweep_keys(key)
+    for i, method in enumerate(SWEEP_METHODS):
+        acc, serial = run_method(method, dr_model, dr_clients, swarm, OPT,
+                                 keys[i], batch_size=8, cfg=cfg, data=data)
+        np.testing.assert_allclose(
+            np.asarray(sweep_run.metrics.mean_val_acc[i]),
+            np.asarray(serial.metrics.mean_val_acc),
+            rtol=1e-6, atol=1e-7, err_msg=method)
+        np.testing.assert_allclose(accs[method], acc, rtol=1e-6, atol=1e-7)
+        _params_equal(jax.tree.map(lambda x: x[i], sweep_run.state.params),
+                      serial.state.params)
+        np.testing.assert_array_equal(
+            np.asarray(sweep_run.metrics.assignments[i]),
+            np.asarray(serial.metrics.assignments), err_msg=method)
+
+
+def test_method_rows_match_plain_engine_paths(dr_clients, dr_model):
+    """Cross-validation against the pre-sweep engine: each masked
+    method row reproduces the corresponding static cfg.aggregation
+    branch bitwise (local == 'none' identity, fedavg == k=1 global
+    cluster, bso-sl == full coordinator with k=n_clusters segments)."""
+    opt = make_optimizer(OPT)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    base = dict(model=dr_model, opt=opt, local_steps=2, batch_size=8,
+                lr=2e-3, n_clusters=3, kmeans_iters=10)
+    for method, agg in [("bso-sl", "bso"), ("local", "none"),
+                        ("fedavg", "fedavg")]:
+        st = make_swarm_state(dr_model, opt, dr_clients,
+                              jax.random.PRNGKey(7))
+        s1, m1 = jit_run_rounds(st, data, EngineConfig(aggregation="bso",
+                                                       **base),
+                                2, method_params(method, N))
+        st = make_swarm_state(dr_model, opt, dr_clients,
+                              jax.random.PRNGKey(7))
+        s2, m2 = jit_run_rounds(st, data, EngineConfig(aggregation=agg,
+                                                       **base), 2)
+        _params_equal(s1.params, s2.params)
+        np.testing.assert_array_equal(np.asarray(m1.mean_val_acc),
+                                      np.asarray(m2.mean_val_acc),
+                                      err_msg=method)
+
+
+# ------------------------------------------------------- pooled sampling
+
+
+def test_pooled_sampler_covers_global_rows_and_no_pads():
+    """pool=True draws are uniform over the pooled real rows: every
+    global row is reachable from every client slot, pad rows never are,
+    and clients draw across client boundaries (the 'merged client').
+    Labels encode global row ids, so drawn labels ARE the drawn rows."""
+    sizes = [5, 3, 2]
+    n_max = max(sizes)
+    gid, labels = 0, np.full((len(sizes), n_max), -1, np.int32)
+    for i, n in enumerate(sizes):
+        labels[i, :n] = np.arange(gid, gid + n)
+        gid += n
+    train = {"images": jnp.zeros((len(sizes), n_max, 2, 2, 3), jnp.float32),
+             "labels": jnp.asarray(labels)}
+    train_n = jnp.asarray(sizes, jnp.int32)
+    seen = [set() for _ in sizes]
+    for s in range(200):
+        batch = sample_swarm_batch(jax.random.PRNGKey(s), train, train_n, 4,
+                                   jnp.asarray(True))
+        got = np.asarray(batch["labels"])
+        assert got.min() >= 0, "pooled sampler drew a pad row"
+        for i in range(len(sizes)):
+            seen[i].update(got[i].tolist())
+    for i in range(len(sizes)):
+        assert seen[i] == set(range(sum(sizes))), \
+            f"client slot {i} cannot reach the whole pool"
+
+
+def test_unpooled_sampler_matches_sample_local_batch():
+    """pool=False is the exact per-client draw (same key, same randint)
+    — non-centralized sweep rows sample bitwise-identical batches to
+    the plain engine path."""
+    sizes = [6, 2, 4]
+    n_max = max(sizes)
+    labels = np.stack([np.where(np.arange(n_max) < n, np.arange(n_max), -1)
+                       for n in sizes]).astype(np.int32)
+    train = {"images": jnp.zeros((3, n_max, 2, 2, 3), jnp.float32),
+             "labels": jnp.asarray(labels)}
+    train_n = jnp.asarray(sizes, jnp.int32)
+    for s in range(20):
+        a = sample_swarm_batch(jax.random.PRNGKey(s), train, train_n, 5,
+                               jnp.asarray(False))
+        b = sample_local_batch(jax.random.PRNGKey(s), train, train_n, 5)
+        np.testing.assert_array_equal(np.asarray(a["labels"]),
+                                      np.asarray(b["labels"]))
+
+
+# --------------------------------------------------- fit key unification
+
+
+def test_fit_matches_fit_scanned_bitwise(dr_clients, dr_model):
+    """One key schedule for both fit paths: the caller's key seeds the
+    engine chain once and each round derives its keys in-program, so
+    the host loop and the scanned program are bitwise interchangeable."""
+    swarm = _swarm(rounds=3, local_steps=2)
+
+    def mk():
+        return SwarmTrainer(dr_model, dr_clients, swarm, OPT,
+                            jax.random.PRNGKey(5), batch_size=8,
+                            aggregation="bso")
+
+    a, b = mk(), mk()
+    a.fit(jax.random.PRNGKey(9))
+    b.fit_scanned(jax.random.PRNGKey(9))
+    assert [l.mean_val_acc for l in a.history] == \
+        [l.mean_val_acc for l in b.history]
+    assert [l.train_loss for l in a.history] == \
+        [l.train_loss for l in b.history]
+    for la, lb in zip(a.history, b.history):
+        np.testing.assert_array_equal(la.assignments, lb.assignments)
+        np.testing.assert_array_equal(la.centers, lb.centers)
+        assert la.events == lb.events
+    _params_equal(a.params, b.params)
+    _params_equal(a.opt_state, b.opt_state)
