@@ -22,18 +22,23 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller data scale for quick runs")
     ap.add_argument("--quick", action="store_true",
-                    help="sweep smoke only: the Table-II method axis as "
-                         "one run_sweep program at --data-scale CPU size")
+                    help="sweep + grid smoke only: the Table-II method "
+                         "axis as one run_sweep program and the k x p1 "
+                         "ablation as one run_grid program, both at "
+                         "--data-scale CPU size")
     ap.add_argument("--data-scale", type=int, default=16,
                     help="Table-I divisor for --quick/--fast runs")
     args = ap.parse_args()
 
     if args.quick:
-        from benchmarks import table2_methods
+        from benchmarks import cluster_ablation, table2_methods
         print("name,us_per_call,derived")
         table2_methods.run(data_scale=args.data_scale, rounds=2,
                            local_steps=2, image_size=16,
                            serial_reference=False)
+        cluster_ablation.grid_bench(data_scale=args.data_scale, rounds=2,
+                                    local_steps=2, serial_reference=False,
+                                    out_json=None)
         return
 
     from benchmarks import (cluster_ablation, comm_scaling, kernel_bench,
@@ -45,7 +50,8 @@ def main() -> None:
         "roofline_report": roofline_report.main,
         "table2_methods": table2_methods.main,
         "table3_archs": table3_archs.main,
-        "cluster_ablation": cluster_ablation.run,
+        "cluster_ablation": lambda: (cluster_ablation.grid_bench(),
+                                     cluster_ablation.run()),
     }
     if args.fast:
         scale = args.data_scale
@@ -53,8 +59,10 @@ def main() -> None:
             data_scale=scale, rounds=2, local_steps=4)
         suites["table3_archs"] = lambda: table3_archs.run(
             data_scale=scale, rounds=2, local_steps=4)
-        suites["cluster_ablation"] = lambda: cluster_ablation.run(
-            data_scale=scale, rounds=2, local_steps=4)
+        suites["cluster_ablation"] = lambda: (
+            cluster_ablation.grid_bench(data_scale=scale, rounds=2,
+                                        local_steps=4, out_json=None),
+            cluster_ablation.run(data_scale=scale, rounds=2, local_steps=4))
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -5,12 +5,17 @@
 14 clinics (Table-I-exact class distribution, scaled for CPU),
 SqueezeNet clients, 3 clusters, the paper's p1=0.9 / p2=0.8.
 
-Demonstrates the functional round engine (PR 2): the whole multi-round
-protocol — local SGD with on-device batch sampling, distribution
-upload, k-means, the jax brain storm, Eq. 2 aggregation — runs as ONE
-scanned device program (``engine.run_rounds``), then the stateful
-``SwarmTrainer`` wrapper replays the same protocol round-by-round with
-host-visible per-round logs.
+Demonstrates the engine's three dispatch granularities:
+
+1. the functional round engine — the whole multi-round protocol
+   (local SGD with on-device batch sampling, distribution upload,
+   k-means, the jax brain storm, Eq. 2 aggregation) as ONE scanned
+   device program (``engine.run_rounds``),
+2. the hyper-parameter grid — a k x p1 x p2 mini-ablation of the
+   knobs the paper fixes, every point fit in ONE vmapped program
+   (``baselines.run_grid_table`` over ``engine.run_grid``),
+3. the stateful ``SwarmTrainer`` wrapper replaying the same protocol
+   round-by-round with host-visible per-round logs.
 """
 import os
 import sys
@@ -22,6 +27,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.baselines import run_grid_table
 from repro.core.engine import (EngineConfig, jit_run_rounds, make_client_eval,
                                make_swarm_data, make_swarm_state,
                                stack_eval_split)
@@ -64,6 +70,20 @@ def main():
     print(f"mean per-clinic test accuracy (paper Eq. 3): {test_acc:.4f}")
     print(f"final clusters: {np.asarray(metrics.assignments[-1]).tolist()}")
     print(f"final centers:  {np.asarray(metrics.centers[-1]).tolist()}")
+
+    # ---- the grid engine: a k x p1 x p2 mini-ablation, ONE program ----
+    swarm = SwarmConfig(n_clients=14, n_clusters=3, rounds=ROUNDS,
+                        local_steps=8)
+    axes = dict(k=(1, 3), p1=(0.9, 1.0), p2=(0.8,))
+    print(f"\nGrid engine: {axes} — "
+          f"{2 * 2 * 1} full fits vmapped into one executable")
+    results, _ = run_grid_table(model, clients, swarm,
+                                OptimizerConfig(name="adam", lr=2e-3),
+                                jax.random.PRNGKey(2), axes=axes,
+                                batch_size=8)
+    for res in results:
+        spec = ", ".join(f"{k}={v}" for k, v in res.items() if k != "acc")
+        print(f"  {spec:<24s} test_acc={res['acc']:.4f}")
 
     # ---- the stateful wrapper: same protocol, per-round host logs ----
     swarm = SwarmConfig(n_clients=14, n_clusters=3, p1=0.9, p2=0.8,

@@ -11,9 +11,14 @@ wrapper.
 from repro.core.aggregation import cluster_fedavg, cluster_psum_fedavg, fedavg  # noqa: F401
 from repro.core.bso import BSAPlan, brain_storm, brain_storm_jax  # noqa: F401
 from repro.core.diststats import param_distribution, swarm_distribution_matrix  # noqa: F401
-from repro.core.engine import (EngineConfig, RoundMetrics, SwarmData,  # noqa: F401
-                               SwarmState, jit_run_rounds, jit_swarm_round,
-                               make_fleet_round, make_swarm_data,
-                               make_swarm_state, run_rounds, swarm_round)
+from repro.core.engine import (EngineConfig, GridPoint,  # noqa: F401
+                               MethodParams, RoundMetrics, SwarmData,
+                               SwarmState, grid_axes, grid_point,
+                               jit_run_grid, jit_run_rounds, jit_run_sweep,
+                               jit_swarm_round, make_fleet_round,
+                               make_grid_config, make_grid_state,
+                               make_swarm_data, make_swarm_state,
+                               make_sweep_config, make_sweep_state,
+                               run_grid, run_rounds, run_sweep, swarm_round)
 from repro.core.kmeans import kmeans  # noqa: F401
 from repro.core.swarm import SwarmTrainer  # noqa: F401

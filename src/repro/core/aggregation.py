@@ -42,8 +42,13 @@ def cluster_fedavg(stacked_params, assignments, n_samples, k: int):
     n_samples:      (N,) training set sizes |D_h|.
     ``k`` only needs to upper-bound the labels in ``assignments``;
     passing ``k = N`` with labels drawn from a smaller range computes
-    the same sums (the sweep engine does exactly this so one segment
-    layout serves every Table-II method).
+    the same sums *bitwise* — per-segment partial sums and the gather
+    back are unchanged by trailing empty segments. The sweep AND grid
+    engines rely on exactly this: one ``k = N`` segment layout serves
+    every Table-II method row and every masked-k grid row (whose
+    k-means labels live in ``[0, point.n_clusters)`` under the static
+    pad ``k_max``), so the aggregation plan never needs a traced
+    segment count.
     Returns the stacked pytree where client i holds its cluster's
     aggregated model (the redistribution step).
     """

@@ -1,16 +1,30 @@
-"""Table II methods as thin slices of the sweep engine.
+"""Table II methods and hyper-parameter grids as thin slices of the
+sweep/grid engine.
 
 Since the method-axis redesign, all four paper methods (centralized /
 local / FedAvg / BSO-SL) are parameterisations of the one fused round
-in :mod:`repro.core.engine` (:class:`~repro.core.engine.MethodParams`).
-This module is the host-facing surface over that axis:
+in :mod:`repro.core.engine` (:class:`~repro.core.engine.MethodParams`),
+and since the grid redesign the BSO knobs the paper fixes (k, p1, p2,
+plus local-step/lr budgets) are too
+(:class:`~repro.core.engine.GridPoint`). This module is the
+host-facing surface over those axes. Which entry point to use:
 
-* :func:`run_method`  — ONE scanned ``run_rounds`` program for one
-  method's whole fit (the serial slice of the sweep; the parity
-  reference ``tests/test_sweep.py`` pins against ``run_sweep`` rows).
-* :func:`run_sweep_table` — the whole Table II axis as ONE vmapped
-  ``run_sweep`` program sharing a single device-resident
-  :class:`~repro.core.engine.SwarmData`.
+* :func:`run_method`  — ONE paper method, one scanned ``run_rounds``
+  program for the whole fit. Use it when you want a single Table-II
+  row (or the serial parity reference for a sweep row —
+  ``tests/test_sweep.py`` pins sweep row m == ``run_method`` bitwise).
+* :func:`run_sweep_table` — the whole Table II *method axis* as ONE
+  vmapped ``run_sweep`` program sharing a single device-resident
+  :class:`~repro.core.engine.SwarmData`. Use it whenever you need two
+  or more methods: M methods cost one compile and one dispatch.
+* :func:`run_grid_table` — a *hyper-parameter grid* (k / p1 / p2 /
+  local_steps / lr axes, any method) as ONE vmapped ``run_grid``
+  program. Use it for ablations: |grid| serial fits collapse into one
+  executable (``BENCH_grid.json`` records the collapse).
+* :func:`run_grid_point` — one grid point as a serial scanned program:
+  the parity oracle for ``run_grid_table`` rows
+  (``tests/test_grid.py``) and the right call for a one-off
+  non-default hyper-parameter fit.
 * :func:`train_centralized` — the original pooled-data host loop, kept
   as the oracle for the engine's pooled-sampling centralized method.
 
@@ -23,6 +37,7 @@ property the SL-survey literature demands of Table II-style claims).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import List, NamedTuple, Sequence
 
@@ -31,12 +46,13 @@ import numpy as np
 
 from repro.configs.base import OptimizerConfig, SwarmConfig
 from repro.core.engine import (EngineConfig, RoundMetrics, SWEEP_METHODS,
-                               SwarmData, SwarmState, jit_run_rounds,
-                               jit_run_sweep, make_client_eval,
-                               make_swarm_data, make_swarm_state,
-                               make_sweep_config, make_sweep_state,
-                               method_params, resolve_local_steps,
-                               stack_eval_split)
+                               SwarmData, SwarmState, grid_axes, grid_point,
+                               jit_run_grid, jit_run_rounds, jit_run_sweep,
+                               make_client_eval, make_grid_config,
+                               make_grid_state, make_swarm_data,
+                               make_swarm_state, make_sweep_config,
+                               make_sweep_state, method_params,
+                               resolve_local_steps, stack_eval_split)
 from repro.core.swarm import eval_client, make_batch
 from repro.models.model import Model
 from repro.optim.optimizers import make_optimizer
@@ -83,9 +99,11 @@ class MethodRun(NamedTuple):
     metrics: RoundMetrics
 
 
-def sweep_keys(key, methods: Sequence[str] = SWEEP_METHODS):
-    """The per-method key schedule :func:`run_sweep_table` uses —
-    the one copy, so serial parity runs reproduce row m exactly."""
+def sweep_keys(key, methods: Sequence = SWEEP_METHODS):
+    """The per-row key schedule :func:`run_sweep_table` and
+    :func:`run_grid_table` use (``methods`` is any row sequence —
+    method names or grid-point specs; only its length matters) — the
+    one copy, so serial parity runs reproduce row m exactly."""
     return jax.random.split(key, len(methods))
 
 
@@ -140,6 +158,94 @@ def run_sweep_table(model: Model, clients_data, swarm: SwarmConfig,
     scores = np.asarray(_jit_sweep_eval(model)(states.params, test_stack))
     accs = {m: float(scores[i].mean()) for i, m in enumerate(methods)}
     return accs, MethodRun(states, ms)
+
+
+def run_grid_point(spec: dict, model: Model, clients_data,
+                   swarm: SwarmConfig, opt_cfg: OptimizerConfig, key, *,
+                   batch_size: int = 16, cfg: EngineConfig = None,
+                   data: SwarmData = None, test_stack=None):
+    """One hyper-parameter point as a serial scanned program.
+
+    ``spec`` is a :func:`~repro.core.engine.grid_point` keyword dict
+    (e.g. ``{"k": 2, "p1": 1.0}``; empty = the paper point). The fit is
+    ONE ``run_rounds`` program whose static maxima come from ``cfg``,
+    so it is the bitwise serial slice of the corresponding
+    :func:`run_grid_table` row — the grid parity oracle
+    (``tests/test_grid.py``). Returns ``(acc, MethodRun)`` like
+    :func:`run_method`.
+    """
+    cfg, data = make_method_setup(model, clients_data, swarm, opt_cfg,
+                                  batch_size=batch_size, cfg=cfg, data=data)
+    point = grid_point(cfg, len(clients_data), **spec)
+    state = make_swarm_state(model, cfg.opt, clients_data, key)
+    state, ms = jit_run_rounds(state, data, cfg, swarm.rounds, point)
+    if test_stack is None:
+        test_stack = stack_eval_split(model.cfg, clients_data, "test")
+    acc = float(np.mean(_jit_client_eval(model)(state.params, test_stack)))
+    return acc, MethodRun(state, ms)
+
+
+def run_grid_table(model: Model, clients_data, swarm: SwarmConfig,
+                   opt_cfg: OptimizerConfig, key, *,
+                   axes: dict = None, specs: Sequence[dict] = None,
+                   batch_size: int = 16, cfg: EngineConfig = None,
+                   data: SwarmData = None, test_stack=None):
+    """A whole hyper-parameter ablation as ONE device program —
+    :func:`run_sweep_table`'s sibling for the grid axis.
+
+    Pass either ``axes`` (named axes, expanded row-major via
+    :func:`~repro.core.engine.grid_axes`, e.g.
+    ``axes={"k": (1, 2, 3), "p1": (0.9, 1.0)}``) or an explicit
+    ``specs`` list of grid-point keyword dicts. The engine statics in
+    ``cfg`` (``n_clusters``, ``local_steps``) are the grid's pads, so
+    every axis value must stay within them; when ``cfg`` is built here,
+    its ``n_clusters`` is raised to the largest ``k`` in the grid and
+    its step budget to the largest ``local_steps`` (over the
+    swarm-resolved default).
+
+    ``key`` splits once into per-point keys (:func:`sweep_keys` — row g
+    is bitwise :func:`run_grid_point` of ``specs[g]`` with ``keys[g]``).
+    Returns ``(results, MethodRun)`` where ``results`` is a list of
+    ``{**spec, "acc": Eq.3 test acc}`` rows in grid order and the
+    MethodRun carries the (G,)-stacked final state and (G, rounds)
+    metrics.
+    """
+    if (axes is None) == (specs is None):
+        raise ValueError("pass exactly one of axes= or specs=")
+    if specs is None:
+        specs = grid_axes(**axes)
+    rows = specs
+    if cfg is None:
+        # pin every row's k/local_steps to the CALLER's statics before
+        # raising the pads to the grid maxima — otherwise a spec that
+        # omits a raised knob would silently inherit the raised value
+        # instead of the paper point, breaking the run_grid_point
+        # parity contract. (With an explicit cfg the statics ARE the
+        # contract and rows inherit them unchanged.)
+        base_steps = resolve_local_steps(swarm, clients_data, batch_size)
+        rows = [{"k": swarm.n_clusters, "local_steps": base_steps, **s}
+                for s in specs]
+        # raise-only: the step pad fixes the PRNG split count, so
+        # shrinking it below the caller's statics would break the
+        # run_grid_point-with-the-same-swarm oracle
+        swarm = dataclasses.replace(
+            swarm,
+            n_clusters=max(swarm.n_clusters,
+                           *(int(r["k"]) for r in rows)),
+            local_steps=max(base_steps,
+                            *(int(r["local_steps"]) for r in rows)))
+    cfg, data = make_method_setup(model, clients_data, swarm, opt_cfg,
+                                  batch_size=batch_size, cfg=cfg, data=data)
+    keys = sweep_keys(key, specs)
+    states = make_grid_state(model, cfg.opt, clients_data, keys)
+    grid = make_grid_config(cfg, len(clients_data), rows)
+    states, ms = jit_run_grid(states, data, cfg, grid, swarm.rounds)
+    if test_stack is None:
+        test_stack = stack_eval_split(model.cfg, clients_data, "test")
+    scores = np.asarray(_jit_sweep_eval(model)(states.params, test_stack))
+    results = [{**spec, "acc": float(scores[g].mean())}
+               for g, spec in enumerate(specs)]
+    return results, MethodRun(states, ms)
 
 
 def train_centralized(model: Model, clients_data: List[dict],

@@ -101,6 +101,16 @@ def brain_storm_jax(key, assignments, val_scores, k: int, p1, p2):
 
     assignments: (N,) int cluster ids from k-means.
     val_scores:  (N,) float local validation accuracies.
+    p1, p2:      python floats *or* traced scalars — they only enter
+                 ``r > p`` comparisons, so the grid engine threads them
+                 as per-row data through one compiled program.
+
+    ``k`` is the static *pad*: per-cluster randomness derives from
+    ``fold_in(key, c)`` (not a shape-``(k,)`` draw), so cluster c's
+    draws are identical under any static ``k > c``. Clusters that are
+    empty — including masked-off pad slots when k-means ran with
+    ``k_active < k`` — are unoccupied and never replace, swap, or count,
+    which makes a padded run bitwise-equal to a natively smaller-k run.
 
     Returns ``(assignments, centers, n_replaced, n_swapped)``:
     post-swap (N,) assignments, (k,) center client indices (-1 for an
@@ -119,12 +129,15 @@ def brain_storm_jax(key, assignments, val_scores, k: int, p1, p2):
     centers = jnp.where(occupied, centers, -1)
 
     k_rep, k_member, k_swap, k_other = jax.random.split(key, 4)
+    cluster_ids = jnp.arange(k, dtype=jnp.uint32)
 
     # 2a. random center replacement (r1 > p1): a uniformly random member
     # per cluster via masked Gumbel-argmax (one draw per (cluster,
     # client), no data-dependent shapes)
-    r1 = jax.random.uniform(k_rep, (k,))
-    g = jax.random.gumbel(k_member, (k, a.shape[0]))
+    r1 = jax.vmap(lambda c: jax.random.uniform(
+        jax.random.fold_in(k_rep, c)))(cluster_ids)
+    g = jax.vmap(lambda c: jax.random.gumbel(
+        jax.random.fold_in(k_member, c), (a.shape[0],)))(cluster_ids)
     rand_member = jnp.argmax(jnp.where(member, g, -jnp.inf),
                              axis=1).astype(jnp.int32)
     do_rep = (r1 > p1) & occupied
@@ -134,9 +147,13 @@ def brain_storm_jax(key, assignments, val_scores, k: int, p1, p2):
     # 2b. sequential cross-cluster center swaps (r2 > p2). Later swaps
     # must see earlier ones (same as the host loop), so unroll over the
     # static k; the swap partner is a uniformly random *other* occupied
-    # cluster via masked Gumbel-argmax.
-    r2 = jax.random.uniform(k_swap, (k,))
-    g2 = jax.random.gumbel(k_other, (k, k))
+    # cluster via masked Gumbel-argmax. The partner gumbels are drawn
+    # per (c, other) pair so pad slots never perturb the real pairs.
+    r2 = jax.vmap(lambda c: jax.random.uniform(
+        jax.random.fold_in(k_swap, c)))(cluster_ids)
+    g2 = jax.vmap(lambda c: jax.vmap(lambda o: jax.random.gumbel(
+        jax.random.fold_in(jax.random.fold_in(k_other, c), o)))(
+            cluster_ids))(cluster_ids)
     n_swapped = jnp.zeros((), jnp.int32)
     for c in range(k):
         valid_other = occupied & (jnp.arange(k) != c)

@@ -42,11 +42,41 @@ assignment vector), ONE compiled program serves the whole axis:
 :class:`MethodParams` + per-method :class:`SwarmState`, sharing a
 single device-resident :class:`SwarmData` — the paper's Table II grid
 (4 methods x rounds programs) collapses to one executable.
+
+The same move generalises to **hyper-parameter grids** (the knobs the
+paper fixes without ablation — k=3, p1=0.9, p2=0.8): a
+:class:`GridPoint` carries the BSO knobs (cluster count, p1, p2,
+local-step and lr overrides) as traced per-row data on top of the
+:class:`MethodParams` masks. The cluster count rides a masked
+static-max path — ``cfg.n_clusters`` is the pad ``k_max``, k-means and
+the brain storm mask clusters ``>= point.n_clusters`` — and the local
+phase applies only the first ``point.local_steps`` updates. So
+:func:`run_grid` vmaps :func:`run_rounds` over stacked
+:class:`GridPoint` rows and a whole (k x p1 x p2) ablation lowers to
+ONE executable too, again sharing one device-resident
+:class:`SwarmData`. Each grid row is bitwise-equal to the serial
+single-point program, and a padded-k row is bitwise-equal to a native
+smaller-k run (``tests/test_grid.py``).
+
+Contract summary (the stable public surface):
+
+* :class:`SwarmState` — the complete mutable swarm (params, opt state,
+  PRNG key, round counter, Eq. 2 sample weights), one pytree.
+* :class:`SwarmData` — the device-resident fixed-shape dataset
+  (padded train stack + sampling bounds + masked eval stacks).
+* :class:`EngineConfig` — the static (hashable) round configuration;
+  equal configs share one compiled program.
+* :class:`MethodParams` / :class:`GridPoint` — traced per-row axes:
+  what the paper varies, expressed as data instead of control flow.
+* :func:`swarm_round` / :func:`run_rounds` / :func:`run_sweep` /
+  :func:`run_grid` — one round / one fit / the Table-II axis / a
+  hyper-parameter grid, each as ONE device program.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -147,6 +177,84 @@ def make_sweep_config(n_clients: int,
     """Stacked :class:`MethodParams` with a leading (M,) method axis —
     the ``SweepConfig`` that :func:`run_sweep` vmaps over."""
     rows = [method_params(m, n_clients) for m in methods]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
+class GridPoint(NamedTuple):
+    """Traced per-row hyper-parameters — grid axes as engine data.
+
+    A strict superset of the method axis: ``method`` is the Table-II
+    mask row (grid rows default to the full bso-sl path) and the knobs
+    override the corresponding :class:`EngineConfig` statics, which act
+    as the row's *pads/maxima*:
+
+    * ``n_clusters`` ``<= cfg.n_clusters`` (the static ``k_max``) —
+      k-means + brain storm run masked to the first ``n_clusters``
+      slots (see :mod:`repro.core.kmeans`),
+    * ``local_steps`` ``<= cfg.local_steps`` — the local phase computes
+      every static step but applies only the first ``local_steps``
+      (the key stream is consumed unconditionally so all rows share
+      one program),
+    * ``p1`` / ``p2`` / ``lr`` — pure value overrides.
+
+    Build rows with :func:`grid_point`, stack them with
+    :func:`make_grid_config`, and :func:`run_grid` vmaps the fit over
+    the stack.
+    """
+    method: MethodParams  # Table-II masks (pool_data/use_coord/base_assign)
+    n_clusters: Any       # () int32 active cluster count, 1..cfg.n_clusters
+    p1: Any               # () float32 center-replacement threshold
+    p2: Any               # () float32 center-swap threshold
+    local_steps: Any      # () int32 applied local steps, 1..cfg.local_steps
+    lr: Any               # () float32 local-phase learning rate
+
+
+def grid_point(cfg: "EngineConfig", n_clients: int, *, method: str = "bso-sl",
+               k=None, p1=None, p2=None, local_steps=None,
+               lr=None) -> GridPoint:
+    """One :class:`GridPoint` from a spec; ``None`` knobs inherit the
+    engine-config value (so the empty spec is exactly the paper point).
+    ``k``/``local_steps`` are validated against the static maxima at
+    build time — the traced program only sees in-range values."""
+    k = cfg.n_clusters if k is None else int(k)
+    if not 1 <= k <= cfg.n_clusters:
+        raise ValueError(f"grid k={k} outside [1, {cfg.n_clusters}] — "
+                         f"cfg.n_clusters is the static pad k_max")
+    steps = cfg.local_steps if local_steps is None else int(local_steps)
+    if not 1 <= steps <= cfg.local_steps:
+        raise ValueError(f"grid local_steps={steps} outside "
+                         f"[1, {cfg.local_steps}] — cfg.local_steps is "
+                         f"the static step budget")
+    return GridPoint(
+        method=method_params(method, n_clients),
+        n_clusters=jnp.asarray(k, jnp.int32),
+        p1=jnp.asarray(cfg.p1 if p1 is None else p1, jnp.float32),
+        p2=jnp.asarray(cfg.p2 if p2 is None else p2, jnp.float32),
+        local_steps=jnp.asarray(steps, jnp.int32),
+        lr=jnp.asarray(cfg.lr if lr is None else lr, jnp.float32))
+
+
+def grid_axes(**axes) -> list:
+    """Cartesian product of named axes into grid-point specs::
+
+        grid_axes(k=(1, 2, 3), p1=(0.9, 1.0))
+        # -> [{'k': 1, 'p1': 0.9}, {'k': 1, 'p1': 1.0}, ...]
+
+    Axis names are :func:`grid_point` keywords (``k``, ``p1``, ``p2``,
+    ``local_steps``, ``lr``, ``method``). Point order is row-major in
+    the given axis order — the row order of :func:`make_grid_config`.
+    """
+    names = list(axes)
+    return [dict(zip(names, combo))
+            for combo in itertools.product(*(axes[n] for n in names))]
+
+
+def make_grid_config(cfg: "EngineConfig", n_clients: int,
+                     specs: Sequence[dict]) -> GridPoint:
+    """Stacked :class:`GridPoint` with a leading (G,) grid axis — the
+    grid that :func:`run_grid` vmaps over. ``specs`` is a list of
+    :func:`grid_point` keyword dicts (see :func:`grid_axes`)."""
+    rows = [grid_point(cfg, n_clients, **s) for s in specs]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
 
@@ -266,6 +374,16 @@ def make_sweep_state(model: Model, opt: Optimizer, clients_data,
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
+def make_grid_state(model: Model, opt: Optimizer, clients_data,
+                    keys) -> SwarmState:
+    """Grid-stacked :class:`SwarmState`: row g is exactly the state
+    :func:`make_swarm_state` builds from ``keys[g]`` — the same
+    stacking contract as :func:`make_sweep_state`, so a grid row and a
+    serial :func:`run_rounds` call seeded with the same key share one
+    PRNG chain (the parity property ``tests/test_grid.py`` pins)."""
+    return make_sweep_state(model, opt, clients_data, keys)
+
+
 # -------------------------------------------------------------- round pieces
 
 
@@ -308,7 +426,7 @@ def sample_swarm_batch(key, train, train_n, batch_size: int, pool):
 
 
 def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
-                unroll: int = 1):
+                unroll: int = 1, n_active=None):
     """The shared local-training body of both regimes: a scan of
     vmapped train steps over the client axis.
 
@@ -317,19 +435,33 @@ def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
     (N, B, ...) batch — sampling a fresh gather in the sim regime,
     slicing the uploaded round batch in the fleet regime.
 
+    ``n_active`` (a traced () int32, or None) is the grid engine's
+    local-step override: every static step still computes (fixed
+    shapes, unconditional key consumption — all grid rows share one
+    program) but steps ``>= n_active`` leave params/opt state
+    untouched, so applying all steps is bitwise the plain path.
+
     ``unroll`` trades compile time for loop overhead: XLA's CPU backend
     executes ops inside a while body markedly slower than the same ops
     unrolled (~2x on convs), so CPU benchmarking wants
     ``unroll=len(xs)``; TPU and large models want the rolled default."""
     vstep = jax.vmap(step, in_axes=(0, 0, 0, None))
 
-    def body(carry, x):
+    def body(carry, ix):
+        i, x = ix
         p, o = carry
-        p, o, m = vstep(p, o, batch_for_step(x), lr)
-        return (p, o), jnp.mean(m["loss"])
+        p2, o2, m = vstep(p, o, batch_for_step(x), lr)
+        if n_active is not None:
+            on = i < n_active
+            p2 = jax.tree.map(lambda new, old: jnp.where(on, new, old),
+                              p2, p)
+            o2 = jax.tree.map(lambda new, old: jnp.where(on, new, old),
+                              o2, o)
+        return (p2, o2), jnp.mean(m["loss"])
 
-    (params, opt_state), losses = jax.lax.scan(body, (params, opt_state),
-                                               xs, unroll=unroll)
+    n_steps = jax.tree.leaves(xs)[0].shape[0]
+    (params, opt_state), losses = jax.lax.scan(
+        body, (params, opt_state), (jnp.arange(n_steps), xs), unroll=unroll)
     return params, opt_state, losses
 
 
@@ -365,30 +497,44 @@ def swarm_round(state: SwarmState, data: SwarmData,
     entire round is one device program; scan it (:func:`run_rounds`)
     and a whole training run is one program.
 
-    ``method`` switches the body onto the Table-II method axis: the
-    coordinator (stats + k-means + brain storm) always runs, but the
-    traced masks pick which assignments aggregate and whether sampling
-    pools — so the one lowered program is vmappable over stacked
-    :class:`MethodParams` (:func:`run_sweep`). With ``method=None`` the
-    static ``cfg.aggregation`` branches keep the leaner single-method
-    programs (``none`` skips the coordinator entirely)."""
+    ``method`` switches the body onto a traced axis: the coordinator
+    (stats + k-means + brain storm) always runs, but the traced masks
+    pick which assignments aggregate and whether sampling pools — so
+    the one lowered program is vmappable over stacked rows. It accepts
+
+    * a :class:`MethodParams` — the Table-II method axis
+      (:func:`run_sweep` vmaps this),
+    * a :class:`GridPoint` — the hyper-parameter grid axis: the method
+      masks plus traced k / p1 / p2 / local-step / lr overrides of the
+      config statics (:func:`run_grid` vmaps this; the statics are the
+      row maxima — see :class:`GridPoint`),
+    * ``None`` — the static ``cfg.aggregation`` branches keep the
+      leaner single-method programs (``none`` skips the coordinator
+      entirely)."""
     model, opt = cfg.model, cfg.opt
     step = make_train_step(model, opt)
     next_key, k_local, k_kmeans, k_bso = jax.random.split(state.key, 4)
 
-    # --- local phase: cfg.local_steps of on-device-sampled SGD
+    grid = method if isinstance(method, GridPoint) else None
+    masks = grid.method if grid is not None else method
+    lr = cfg.lr if grid is None else grid.lr
+
+    # --- local phase: cfg.local_steps of on-device-sampled SGD (grid
+    # rows apply only the first grid.local_steps of them)
     sample_keys = jax.random.split(k_local, cfg.local_steps)
-    if method is None:
+    if masks is None:
         batch_for_step = lambda kt: sample_local_batch(
             kt, data.train, data.train_n, cfg.batch_size)
     else:
         batch_for_step = lambda kt: sample_swarm_batch(
             kt, data.train, data.train_n, cfg.batch_size,
-            method.pool_data)
+            masks.pool_data)
     params, opt_state, losses = local_phase(
-        step, state.params, state.opt_state, cfg.lr, sample_keys,
-        batch_for_step, unroll=cfg.local_unroll)
-    train_loss = losses[-1]
+        step, state.params, state.opt_state, lr, sample_keys,
+        batch_for_step, unroll=cfg.local_unroll,
+        n_active=None if grid is None else grid.local_steps)
+    # the last *applied* step's loss (grid rows stop early)
+    train_loss = losses[-1] if grid is None else losses[grid.local_steps - 1]
 
     # --- eval: per-client val accuracy (shared within clusters, §III.C)
     val = make_client_eval(model)(params, data.val)
@@ -396,17 +542,23 @@ def swarm_round(state: SwarmState, data: SwarmData,
     # --- coordinator + aggregation
     N = data.train_n.shape[0]
     zero = jnp.zeros((), jnp.int32)
-    if method is not None:
-        # the method axis: one program, per-method traced masks. The
+    if masks is not None:
+        method = masks
+        # the method/grid axis: one program, per-row traced masks. The
         # aggregation segment count is N so every base_assign plan
         # (arange = identity, zeros = global) shares the bso layout.
+        # cfg.n_clusters is the static pad k_max; a grid row masks the
+        # coordinator down to its traced point.n_clusters.
         k = cfg.n_clusters
         assert k <= N, "method axis needs n_clusters <= n_clients"
+        k_act = None if grid is None else grid.n_clusters
+        p1 = cfg.p1 if grid is None else grid.p1
+        p2 = cfg.p2 if grid is None else grid.p2
         feats = swarm_distribution_matrix(params, use_pallas=cfg.use_pallas)
         _, a0 = kmeans(k_kmeans, feats, k=k, iters=cfg.kmeans_iters,
-                       use_pallas=cfg.use_pallas)
+                       use_pallas=cfg.use_pallas, k_active=k_act)
         bsa_a, bsa_c, n_rep, n_swap = brain_storm_jax(
-            k_bso, a0, val, k, cfg.p1, cfg.p2)
+            k_bso, a0, val, k, p1, p2)
         use = method.use_coord
         assignments = jnp.where(use, bsa_a, method.base_assign)
         centers = jnp.where(use, bsa_c, -1)
@@ -450,7 +602,9 @@ def run_rounds(state: SwarmState, data: SwarmData, cfg: EngineConfig,
                rounds: int, method: MethodParams = None):
     """Scan :func:`swarm_round` over ``rounds``: the whole multi-round
     fit as ONE device program. Metrics gain a leading (rounds,) axis.
-    ``method`` threads the Table-II method axis through every round."""
+    ``method`` threads a :class:`MethodParams` (Table-II method axis)
+    or :class:`GridPoint` (hyper-parameter grid row) through every
+    round."""
     def body(s, _):
         return swarm_round(s, data, cfg, method)
 
@@ -475,6 +629,26 @@ def run_sweep(state: SwarmState, data: SwarmData, cfg: EngineConfig,
     return jax.vmap(one)(state, sweep)
 
 
+def run_grid(state: SwarmState, data: SwarmData, cfg: EngineConfig,
+             grid: GridPoint, rounds: int):
+    """A whole hyper-parameter ablation as ONE device program.
+
+    ``state`` is grid-stacked (:func:`make_grid_state`), ``grid`` is
+    the stacked :class:`GridPoint` (:func:`make_grid_config`); both
+    carry a leading (G,) axis. The single :class:`SwarmData` is closed
+    over un-vmapped, so every grid point reads the same device buffers
+    — |grid| serial fits collapse into one vmapped executable whose
+    static shapes come from the row maxima in ``cfg``. Row g is
+    exactly ``run_rounds(state[g], data, cfg, rounds, grid[g])`` — the
+    parity contract ``tests/test_grid.py`` asserts against the serial
+    ``baselines.run_grid_point`` slice.
+    """
+    def one(s, g):
+        return run_rounds(s, data, cfg, rounds, g)
+
+    return jax.vmap(one)(state, grid)
+
+
 # module-level jitted entry points: the cache is shared across every
 # host wrapper holding an equal EngineConfig (state buffers donated —
 # each round updates the swarm in place)
@@ -484,6 +658,8 @@ jit_run_rounds = jax.jit(run_rounds, static_argnames=("cfg", "rounds"),
                          donate_argnums=(0,))
 jit_run_sweep = jax.jit(run_sweep, static_argnames=("cfg", "rounds"),
                         donate_argnums=(0,))
+jit_run_grid = jax.jit(run_grid, static_argnames=("cfg", "rounds"),
+                       donate_argnums=(0,))
 
 
 # ------------------------------------------------------------- fleet regime

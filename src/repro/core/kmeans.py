@@ -7,10 +7,23 @@ its assigned centroid — so k clusters survive even with N=14 clients
 and re-seeded centroids can actually separate (a single shared far
 point would leave duplicate centroids forever).
 
+**Masked static-max clusters** (the grid engine's k axis): every entry
+point takes an optional traced ``k_active`` — the static ``k`` becomes
+an upper bound (pad), and only clusters ``< k_active`` can be seeded,
+assigned to, or re-seeded. Per-index randomness derives from
+``fold_in(key, i)`` rather than a shape-``(k,)`` draw, so the first
+``k_active`` draws are *bitwise identical* no matter the static pad:
+a ``k=k_max, k_active=j`` run reproduces a native ``k=j`` run exactly
+(``tests/test_grid.py`` pins this), which is what lets
+``engine.run_grid`` vmap a cluster-count ablation into one program.
+``k_active=None`` keeps the plain static-k path.
+
 The distance/assign step has two interchangeable implementations:
 the jnp path below (the oracle) and the ``kmeans_assign`` Pallas kernel
 (``use_pallas=True``) — one distance-matmul+argmin device program per
-Lloyd iteration.
+Lloyd iteration. The masked path always assigns through the jnp
+implementation (the kernel has no mask operand); since ``k`` is tiny
+the matmul is negligible either way.
 """
 from __future__ import annotations
 
@@ -26,10 +39,14 @@ def _pairwise_sq_dists(X, C):
 
 
 def kmeans_pp_init(key, X, k: int):
-    """k-means++ seeding."""
+    """k-means++ seeding. Draws derive per-index from ``fold_in`` so
+    seeds 0..j are identical for every static ``k >= j`` — the masked
+    path's pad-invariance. Deliberately unmasked: pad slots beyond a
+    caller's ``k_active`` still seed (fixed shapes, identical first
+    ``k_active`` draws) and are masked out of every downstream
+    assignment instead."""
     N = X.shape[0]
-    keys = jax.random.split(key, k)
-    idx0 = jax.random.randint(keys[0], (), 0, N)
+    idx0 = jax.random.randint(jax.random.fold_in(key, 0), (), 0, N)
     C = jnp.zeros((k, X.shape[1]), X.dtype).at[0].set(X[idx0])
 
     def body(i, C):
@@ -39,27 +56,39 @@ def kmeans_pp_init(key, X, k: int):
         dists = jnp.where(valid[None, :], dists, jnp.inf)
         d = jnp.min(dists, axis=1)
         p = d / jnp.maximum(d.sum(), 1e-12)
-        nxt = jax.random.choice(keys[i], N, p=p)
+        nxt = jax.random.choice(jax.random.fold_in(key, i), N, p=p)
         return C.at[i].set(X[nxt])
 
     return jax.lax.fori_loop(1, k, body, C)
 
 
-def assign(X, C):
-    """Nearest-centroid assignment (the kmeans_assign kernel's math)."""
-    return jnp.argmin(_pairwise_sq_dists(X, C), axis=1)
+def assign(X, C, k_active=None):
+    """Nearest-centroid assignment (the kmeans_assign kernel's math).
+    With ``k_active`` only clusters ``< k_active`` are eligible."""
+    d = _pairwise_sq_dists(X, C)
+    if k_active is not None:
+        d = jnp.where(jnp.arange(C.shape[0])[None, :] < k_active,
+                      d, jnp.inf)
+    return jnp.argmin(d, axis=1)
 
 
-def _assign_fn(use_pallas: bool):
+def _assign_fn(use_pallas: bool, k_active=None):
+    if k_active is not None:
+        # masked path: the Pallas kernel has no mask operand; the jnp
+        # argmin over masked distances is the one implementation
+        return lambda X, C: assign(X, C, k_active)
     if use_pallas:
         from repro.kernels import ops as kops
         return kops.kmeans_assign
     return assign
 
 
-def lloyd_step(X, C, k: int, *, use_pallas: bool = False):
-    """One Lloyd iteration: assign, recompute means, reseed empties."""
-    a = _assign_fn(use_pallas)(X, C)
+def lloyd_step(X, C, k: int, *, use_pallas: bool = False, k_active=None):
+    """One Lloyd iteration: assign, recompute means, reseed empties.
+    Only clusters ``< k_active`` count as re-seedable empties — the
+    inactive pad slots must stay out of the far-point budget or a
+    ``k_active=j`` run would burn its farthest points on dead slots."""
+    a = _assign_fn(use_pallas, k_active)(X, C)
     onehot = jax.nn.one_hot(a, k, dtype=X.dtype)             # (N, K)
     counts = onehot.sum(axis=0)                              # (K,)
     sums = onehot.T @ X                                      # (K, F)
@@ -74,15 +103,25 @@ def lloyd_step(X, C, k: int, *, use_pallas: bool = False):
     d = jnp.sum(diff * diff, axis=1)
     far_order = jnp.argsort(-d)                              # (N,)
     empty = counts == 0
+    if k_active is not None:
+        empty = empty & (jnp.arange(k) < k_active)
     rank = jnp.clip(jnp.cumsum(empty.astype(jnp.int32)) - 1,
                     0, X.shape[0] - 1)                       # (K,)
     newC = jnp.where(empty[:, None], X[far_order[rank]], newC)
     return newC
 
 
-def kmeans(key, X, k: int, iters: int = 20, *, use_pallas: bool = False):
-    """Returns (centroids (k,F), assignments (N,))."""
+def kmeans(key, X, k: int, iters: int = 20, *, use_pallas: bool = False,
+           k_active=None):
+    """Returns (centroids (k,F), assignments (N,)).
+
+    ``k`` is static (shapes); ``k_active`` optionally restricts the
+    run to the first ``k_active`` clusters as traced data — assignments
+    land in ``[0, k_active)`` and match a native ``k=k_active`` run
+    bitwise (centroid rows ``>= k_active`` are dead pad)."""
     C0 = kmeans_pp_init(key, X, k)
     C = jax.lax.fori_loop(
-        0, iters, lambda it, C: lloyd_step(X, C, k, use_pallas=use_pallas), C0)
-    return C, _assign_fn(use_pallas)(X, C)
+        0, iters,
+        lambda it, C: lloyd_step(X, C, k, use_pallas=use_pallas,
+                                 k_active=k_active), C0)
+    return C, _assign_fn(use_pallas, k_active)(X, C)

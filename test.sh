@@ -10,10 +10,13 @@
 # can't compile and run two rounds, nothing downstream is worth the
 # full suite's wall time. Stage 2 is the sweep smoke: 2 rounds x 4
 # Table-II methods must lower to ONE vmapped executable and run.
+# Stage 3 is the grid smoke: the k x p1 hyper-parameter ablation must
+# lower to ONE vmapped executable (compile-count asserted) and run.
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
 python -m pytest -x -q tests/test_engine.py::test_engine_smoke
 python -m pytest -x -q tests/test_sweep.py::test_sweep_smoke_one_program
+python -m pytest -x -q tests/test_grid.py::test_grid_smoke_one_program
 exec python -m pytest -x -q "$@"

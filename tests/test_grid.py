@@ -1,0 +1,265 @@
+"""Grid-engine parity/property harness (PR 4).
+
+Locks down the hyper-parameter grid axis: the vmapped ``run_grid``
+program must lower to ONE executable and reproduce each serial
+``run_grid_point`` slice bit-for-bit (same PRNG keys); a padded-k grid
+row must reproduce a natively smaller-k run bitwise (the masked
+static-max k-means + pad-stable fold_in RNG contract); the default
+grid point must be bitwise the Table-II bso-sl method path; and the
+local-step / lr overrides must have their masked-no-op semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.baselines import (run_grid_point, run_grid_table, run_method,
+                                  sweep_keys)
+from repro.core.engine import (EngineConfig, GridPoint, grid_axes, grid_point,
+                               jit_run_grid, jit_run_rounds, make_grid_config,
+                               make_grid_state, make_swarm_data,
+                               make_swarm_state, method_params, run_grid)
+from repro.core.kmeans import kmeans
+from repro.core.swarm import SwarmTrainer
+from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+
+SMALL_TABLE = np.maximum(TABLE_I // 16, (TABLE_I > 0).astype(np.int64) * 2)
+N = TABLE_I.shape[1]
+OPT = OptimizerConfig(name="adam", lr=2e-3)
+
+#: the acceptance grid: k x p1, 6 points, one executable
+ACCEPTANCE_AXES = dict(k=(1, 2, 3), p1=(0.9, 1.0))
+
+
+@pytest.fixture(scope="module")
+def dr_clients():
+    return make_dr_swarm_data(image_size=16, seed=0, table=SMALL_TABLE)
+
+
+@pytest.fixture(scope="module")
+def dr_model():
+    return build_model(get_config("squeezenet-dr"))
+
+
+def _swarm(rounds=2, local_steps=2, n_clusters=3):
+    return SwarmConfig(n_clients=N, n_clusters=n_clusters, rounds=rounds,
+                       local_steps=local_steps, kmeans_iters=10)
+
+
+def _cfg(model, *, local_steps=2, n_clusters=3):
+    return EngineConfig(model=model,
+                        opt=make_optimizer(OPT), local_steps=local_steps,
+                        batch_size=8, lr=2e-3, aggregation="bso",
+                        n_clusters=n_clusters, p1=0.9, p2=0.8,
+                        kmeans_iters=10)
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ----------------------------------------------------- one-program property
+
+
+def test_grid_smoke_one_program(dr_clients, dr_model):
+    """Fail-fast stage for test.sh: the k{1,2,3} x p1{0.9,1.0}
+    acceptance grid lowers to ONE executable, runs 2 rounds, and
+    produces finite well-formed metrics; repeated grids hit the jit
+    cache (the compile-count assertion)."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    specs = grid_axes(**ACCEPTANCE_AXES)
+    G = len(specs)
+    keys = jax.random.split(jax.random.PRNGKey(0), G)
+    states = make_grid_state(dr_model, cfg.opt, dr_clients, keys)
+    grid = make_grid_config(cfg, N, specs)
+
+    # one lowering == one device program for the whole G-point ablation
+    lowered = jax.jit(run_grid, static_argnames=("cfg", "rounds")).lower(
+        states, data, cfg, grid, 2)
+    compiled = lowered.compile()
+    s, ms = compiled(states, data, grid)
+
+    assert np.asarray(ms.mean_val_acc).shape == (G, 2)
+    assert np.isfinite(np.asarray(ms.mean_val_acc)).all()
+    assert np.isfinite(np.asarray(ms.train_loss)).all()
+    assert np.asarray(ms.assignments).shape == (G, 2, N)
+    # every row's assignments stay inside its own (traced) k
+    ks = np.asarray(grid.n_clusters)
+    assert (np.asarray(ms.assignments).max(axis=(1, 2)) < ks).all()
+    assert (np.asarray(s.round) == 2).all()
+
+    # module-level entry point: at most one compile, then cache hits
+    states = make_grid_state(dr_model, cfg.opt, dr_clients, keys)
+    n0 = jit_run_grid._cache_size()
+    s2, _ = jit_run_grid(states, data, cfg, grid, 2)
+    n1 = jit_run_grid._cache_size()
+    assert n1 <= n0 + 1
+    s2 = jax.tree.map(jnp.copy, s2)
+    jit_run_grid(s2, data, cfg, grid, 2)
+    assert jit_run_grid._cache_size() == n1, "run_grid recompiled"
+
+
+# ------------------------------------------------- grid vs serial parity
+
+
+def test_grid_rows_match_serial_oracle(dr_clients, dr_model):
+    """The parity contract: row g of one vmapped run_grid program ==
+    the serial run_grid_point slice seeded with the same key — allclose
+    per-round accuracies, bitwise-equal final params."""
+    swarm = _swarm()
+    key = jax.random.PRNGKey(42)
+    results, grid_run = run_grid_table(dr_model, dr_clients, swarm, OPT, key,
+                                       axes=ACCEPTANCE_AXES, batch_size=8)
+    specs = grid_axes(**ACCEPTANCE_AXES)
+    keys = sweep_keys(key, specs)
+    for g, spec in enumerate(specs):
+        acc, serial = run_grid_point(spec, dr_model, dr_clients, swarm, OPT,
+                                     keys[g], batch_size=8)
+        np.testing.assert_allclose(
+            np.asarray(grid_run.metrics.mean_val_acc[g]),
+            np.asarray(serial.metrics.mean_val_acc),
+            rtol=1e-6, atol=1e-7, err_msg=str(spec))
+        np.testing.assert_allclose(results[g]["acc"], acc,
+                                   rtol=1e-6, atol=1e-7)
+        _params_equal(jax.tree.map(lambda x: x[g], grid_run.state.params),
+                      serial.state.params)
+        np.testing.assert_array_equal(
+            np.asarray(grid_run.metrics.assignments[g]),
+            np.asarray(serial.metrics.assignments), err_msg=str(spec))
+
+
+def test_padded_k_matches_native_smaller_k(dr_clients, dr_model):
+    """A grid row with k=2 under the static pad k_max=3 is bitwise the
+    native n_clusters=2 run (the static method path): the fold_in RNG
+    scheme makes the first k_active cluster draws pad-invariant, and
+    the masked k-means/brain-storm never let a dead slot act."""
+    key = jax.random.PRNGKey(3)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+
+    cfg_pad = _cfg(dr_model, n_clusters=3)
+    state = make_swarm_state(dr_model, cfg_pad.opt, dr_clients, key)
+    s_pad, m_pad = jit_run_rounds(state, data, cfg_pad, 2,
+                                  grid_point(cfg_pad, N, k=2))
+
+    cfg_nat = _cfg(dr_model, n_clusters=2)
+    state = make_swarm_state(dr_model, cfg_nat.opt, dr_clients, key)
+    s_nat, m_nat = jit_run_rounds(state, data, cfg_nat, 2,
+                                  method_params("bso-sl", N))
+
+    _params_equal(s_pad.params, s_nat.params)
+    _params_equal(s_pad.opt_state, s_nat.opt_state)
+    np.testing.assert_array_equal(np.asarray(m_pad.assignments),
+                                  np.asarray(m_nat.assignments))
+    # centers agree on the live slots; the pad slot is always empty
+    np.testing.assert_array_equal(np.asarray(m_pad.centers)[:, :2],
+                                  np.asarray(m_nat.centers))
+    assert (np.asarray(m_pad.centers)[:, 2] == -1).all()
+
+
+def test_masked_kmeans_matches_native_k():
+    """Unit-level pad-invariance: kmeans(k=k_max, k_active=j) ==
+    kmeans(k=j) — identical assignments, and live centroids equal up
+    to the (k-dependent) matmul reduction tiling of the mean step —
+    for every j <= k_max, on arbitrary feature matrices."""
+    X = jax.random.normal(jax.random.PRNGKey(0), (20, 5))
+    key = jax.random.PRNGKey(1)
+    for j in (1, 2, 3, 4):
+        C_nat, a_nat = kmeans(key, X, k=j, iters=8)
+        C_pad, a_pad = kmeans(key, X, k=4, iters=8,
+                              k_active=jnp.asarray(j, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(a_pad), np.asarray(a_nat))
+        np.testing.assert_allclose(np.asarray(C_pad)[:j],
+                                   np.asarray(C_nat),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_default_grid_point_matches_run_method(dr_clients, dr_model):
+    """The empty spec IS the paper point: run_grid_point({}) is bitwise
+    run_method('bso-sl') with the same key — the bridge between the
+    grid axis and the Table-II method axis."""
+    swarm = _swarm()
+    key = jax.random.PRNGKey(9)
+    acc_m, rm = run_method("bso-sl", dr_model, dr_clients, swarm, OPT, key,
+                           batch_size=8)
+    acc_g, rg = run_grid_point({}, dr_model, dr_clients, swarm, OPT, key,
+                               batch_size=8)
+    assert acc_m == acc_g
+    _params_equal(rm.state.params, rg.state.params)
+    np.testing.assert_array_equal(np.asarray(rm.metrics.assignments),
+                                  np.asarray(rg.metrics.assignments))
+
+
+def test_grid_row_matches_swarm_trainer_slice(dr_clients, dr_model):
+    """A default grid row reproduces the stateful SwarmTrainer fit when
+    both share one PRNG chain: make_swarm_state(key) splits key into
+    (init, round) keys, so SwarmTrainer(key).fit(split(key)[1]) walks
+    the identical schedule."""
+    key = jax.random.PRNGKey(17)
+    swarm = _swarm(rounds=2, local_steps=2)
+    acc, rg = run_grid_point({}, dr_model, dr_clients, swarm, OPT, key,
+                             batch_size=8)
+    tr = SwarmTrainer(dr_model, dr_clients, swarm, OPT, key, batch_size=8,
+                      aggregation="bso")
+    tr.fit(jax.random.split(key)[1])
+    _params_equal(tr.params, rg.state.params)
+    np.testing.assert_allclose(
+        [l.mean_val_acc for l in tr.history],
+        np.asarray(rg.metrics.mean_val_acc), rtol=1e-6, atol=1e-7)
+
+
+# --------------------------------------------------- knob semantics
+
+
+def test_local_steps_and_lr_override_semantics(dr_clients, dr_model):
+    """Masked local steps: a row running all static steps is bitwise
+    the unmasked path (covered above); a row with lr=0 must leave
+    params exactly at their cluster-aggregated initial values — adam's
+    zero-lr update is the identity on params — proving the traced lr
+    actually reaches the train step."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    key = jax.random.PRNGKey(5)
+    state = make_swarm_state(dr_model, cfg.opt, dr_clients, key)
+    p0 = jax.tree.map(jnp.copy, state.params)
+    s, m = jit_run_rounds(state, data, cfg, 1, grid_point(cfg, N, lr=0.0))
+    # local identity + Eq.2 redistribution: every client's params are a
+    # convex combination of the *initial* params of its cluster
+    from repro.core.aggregation import cluster_fedavg
+    expect = cluster_fedavg(p0, m.assignments[0], s.n_samples, k=N)
+    _params_equal(s.params, expect)
+
+    # fewer active steps changes the trajectory (the mask is not a
+    # no-op) but stays well-formed
+    state = make_swarm_state(dr_model, cfg.opt, dr_clients, key)
+    s1, m1 = jit_run_rounds(state, data, cfg, 1,
+                            grid_point(cfg, N, local_steps=1))
+    state = make_swarm_state(dr_model, cfg.opt, dr_clients, key)
+    s2, m2 = jit_run_rounds(state, data, cfg, 1, grid_point(cfg, N))
+    diffs = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(s1.params),
+                             jax.tree.leaves(s2.params))]
+    assert any(diffs), "local_steps mask had no effect"
+    assert np.isfinite(float(m1.train_loss[0]))
+
+
+def test_grid_point_validates_against_static_maxima(dr_model):
+    """k and local_steps outside [1, static max] fail at build time."""
+    cfg = _cfg(dr_model)
+    for bad in (dict(k=0), dict(k=4), dict(local_steps=0),
+                dict(local_steps=3)):
+        with pytest.raises(ValueError):
+            grid_point(cfg, N, **bad)
+    assert isinstance(grid_point(cfg, N, k=1, local_steps=1), GridPoint)
+
+
+def test_grid_axes_row_major_product():
+    specs = grid_axes(k=(1, 2), p1=(0.9, 1.0), p2=(0.8,))
+    assert specs == [
+        {"k": 1, "p1": 0.9, "p2": 0.8}, {"k": 1, "p1": 1.0, "p2": 0.8},
+        {"k": 2, "p1": 0.9, "p2": 0.8}, {"k": 2, "p1": 1.0, "p2": 0.8}]

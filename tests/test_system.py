@@ -33,24 +33,32 @@ def _trainer(model, clients, aggregation, rounds=2, local_steps=4, seed=0):
 
 def test_bso_swarm_round_runs_and_improves(dr_clients):
     """The protocol runs end-to-end and learns. With ~16x-reduced data
-    the per-clinic test sets are 2-3 samples, so accuracy is quantised;
-    the robust signals are (a) train loss descends across rounds,
-    (b) final mean accuracy clears the 5-class random floor, and
-    (c) the per-round protocol artifacts are well-formed. The
-    full-scale Table II comparison lives in benchmarks/table2_methods."""
+    the per-clinic test sets are 2-3 samples, so accuracy is quantised
+    and a single fit key is roulette (one sample flip moves Eq. 3 by
+    ~0.02); the robust signals are (a) train loss descends across
+    rounds, (b) final mean accuracy clears the 5-class random floor
+    *averaged over fit keys* (same reformulation as
+    test_collaboration_beats_isolation), and (c) the per-round
+    protocol artifacts are well-formed. The full-scale Table II
+    comparison lives in benchmarks/table2_methods."""
     model = build_model(get_config("squeezenet-dr"))
-    tr = _trainer(model, dr_clients, "bso", rounds=4, local_steps=10)
-    tr.fit(jax.random.PRNGKey(1))
-    losses = [log.train_loss for log in tr.history]
-    # every round's training loss sits below the ln(5)=1.61 random floor
-    # (per-round loss is non-monotone by design: aggregation mixes
-    # cluster models and the next round re-descends)
-    assert all(l < 1.61 for l in losses), losses
-    assert tr.mean_accuracy("test") > 0.25     # above 1/5 random
-    for log in tr.history:
-        assert log.assignments.shape == (14,)
-        assert set(log.assignments.tolist()) <= {0, 1, 2}
-        assert log.centers.shape[0] == 3
+    accs = []
+    for i, fit_key in enumerate((1, 11, 21)):
+        tr = _trainer(model, dr_clients, "bso", rounds=4, local_steps=10)
+        tr.fit(jax.random.PRNGKey(fit_key))
+        accs.append(tr.mean_accuracy("test"))
+        if i == 0:
+            losses = [log.train_loss for log in tr.history]
+            # every round's training loss sits below the ln(5)=1.61
+            # random floor (per-round loss is non-monotone by design:
+            # aggregation mixes cluster models and the next round
+            # re-descends)
+            assert all(l < 1.61 for l in losses), losses
+            for log in tr.history:
+                assert log.assignments.shape == (14,)
+                assert set(log.assignments.tolist()) <= {0, 1, 2}
+                assert log.centers.shape[0] == 3
+    assert float(np.mean(accs)) > 0.25, accs   # above 1/5 random
 
 
 def test_collaboration_beats_isolation(dr_clients):
