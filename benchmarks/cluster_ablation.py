@@ -45,7 +45,7 @@ from repro.core.engine import (EngineConfig, grid_axes, jit_run_rounds,
                                stack_eval_split)
 from repro.core.kmeans import kmeans
 from repro.core.swarm import SwarmTrainer, eval_client
-from repro.data.dr import TABLE_I, make_dr_swarm_data, scale_table
+from repro.data.dr import make_dr_swarm_data, scale_table
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
 from repro.train.steps import make_train_step

@@ -13,9 +13,16 @@ The benchmark measures the *actual* byte counts from the implementation
 (diststats.upload_bytes / full_params_bytes) across the assigned archs,
 plus the measured wall-time of the coordinator stage (stats + k-means +
 brain storm) to show it stays negligible as N grows.
+
+``--fleet`` (its own process: it forces the 8-device CPU stand-in)
+runs the end-to-end fleet driver instead and writes ``BENCH_fleet.json``
+— per-round stat-upload vs Eq. 2 aggregation traffic measured from the
+ONE compiled fleet-round executable (see ``repro.launch.fleet_driver``
+and docs/BENCHMARKS.md).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -76,10 +83,94 @@ def coordinator_scaling():
             f"kmeans_us={us:.0f};brainstorm_us={bs_us:.0f};features={F}")
 
 
+def fleet_bench(n_clients: int = 8, rounds: int = 3, data_scale: int = 16,
+                image_size: int = 16, local_steps: int = 4,
+                batch_size: int = 8, seed: int = 0,
+                out_json: str = "BENCH_fleet.json"):
+    """End-to-end fleet traffic: drive ``rounds`` full BSO-SL rounds
+    (``repro.launch.fleet_driver``) and record, per round, the tiny
+    host-facing coordinator traffic against the on-mesh Eq. 2
+    aggregation traffic of the ONE compiled round executable. Needs a
+    multi-device backend for a non-trivial pod axis — run via
+    ``python -m benchmarks.comm_scaling --fleet`` (own process, forces
+    the 8-device stand-in), NOT from the ``benchmarks.run`` suite."""
+    from repro.launch.fleet_driver import make_unit_fleet, run_fleet
+
+    model, opt, mesh, clients = make_unit_fleet(
+        n_clients, image_size=image_size, data_scale=data_scale, seed=seed)
+    res = run_fleet(model, opt, mesh, clients, rounds=rounds,
+                    local_steps=local_steps, batch_size=batch_size,
+                    seed=seed)
+    comm = res.comm
+    per_round = [
+        {"round": r.round, "mean_val_acc": r.mean_val_acc,
+         "train_loss": r.train_loss,
+         "stat_upload_bytes": comm["stat_upload_bytes"],
+         "coordinator_roundtrip_bytes": comm["stat_upload_bytes"]
+         + comm["val_upload_bytes"] + comm["cluster_feedback_bytes"],
+         "eq2_collective_bytes_per_device":
+             comm["eq2_collective_bytes"]["total"],
+         "n_bsa_events": len(r.events),
+         "us_round": r.wall_s * 1e6, "us_coordinator": r.coord_s * 1e6}
+        for r in res.history]
+    artifact = {
+        **res.meta,
+        "data_scale": data_scale,
+        "n_compiles": res.n_compiles,
+        "compile_s": res.compile_s,
+        "per_round": per_round,
+        "comm": comm,
+        "note": "one executable for all rounds; the coordinator "
+                "round-trip (stats up, clusters down) is the ONLY "
+                "host-facing model-derived traffic — Eq. 2 stays on the "
+                "mesh as collectives (paper §III.B). Byte columns are "
+                "per round; collective bytes are per device from the "
+                "optimized-HLO census (launch.comm).",
+    }
+    for pr in per_round:
+        row(f"fleet/round{pr['round']}", pr["us_round"],
+            f"val_acc={pr['mean_val_acc']:.4f};"
+            f"stats_up_B={pr['stat_upload_bytes']};"
+            f"eq2_coll_B={pr['eq2_collective_bytes_per_device']};"
+            f"coord_us={pr['us_coordinator']:.0f}")
+    row("fleet/summary", res.compile_s * 1e6,
+        f"n_compiles={res.n_compiles};"
+        f"coord_reduction_x={comm['coord_reduction_x']:.0f};"
+        f"devices={res.meta['n_devices']}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"[fleet_bench] wrote {out_json}")
+    return artifact
+
+
 def main():
     model_comm_table()
     coordinator_scaling()
 
 
-if __name__ == "__main__":
+def _cli():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the end-to-end fleet driver benchmark and "
+                         "write BENCH_fleet.json (forces the 8-device "
+                         "CPU stand-in; run standalone)")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="don't write BENCH_fleet.json")
+    args = ap.parse_args()
+    if args.fleet:
+        from repro.launch.swarm_fleet import force_host_device_count
+        force_host_device_count(8)
+        print("name,us_per_call,derived")
+        fleet_bench(rounds=args.rounds,
+                    out_json=None if args.no_artifacts
+                    else "BENCH_fleet.json")
+        return
+    print("name,us_per_call,derived")
     main()
+
+
+if __name__ == "__main__":
+    _cli()

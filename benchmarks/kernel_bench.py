@@ -10,7 +10,6 @@ for device numbers.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import row, timed
 from repro.kernels import ops, ref

@@ -28,6 +28,10 @@ def main() -> None:
                          "--data-scale CPU size")
     ap.add_argument("--data-scale", type=int, default=16,
                     help="Table-I divisor for --quick/--fast runs")
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="never (re)write BENCH_*.json — the CI smoke "
+                         "guard (--quick already writes none; this also "
+                         "covers the full/--fast suites)")
     args = ap.parse_args()
 
     if args.quick:
@@ -63,6 +67,17 @@ def main() -> None:
             cluster_ablation.grid_bench(data_scale=scale, rounds=2,
                                         local_steps=4, out_json=None),
             cluster_ablation.run(data_scale=scale, rounds=2, local_steps=4))
+    if args.no_artifacts and not args.fast:
+        # --fast is already write-free (its overrides above pass
+        # bench_json/out_json=None); only the full suite's writers —
+        # table2_methods.main (BENCH_sweep.json) and the default
+        # grid_bench (BENCH_grid.json) — need the artifact-free variant
+        # of the SAME measurement (table2's main() parameters)
+        suites["table2_methods"] = lambda: table2_methods.run(
+            paper_budget_oracle=True)
+        suites["cluster_ablation"] = lambda: (
+            cluster_ablation.grid_bench(out_json=None),
+            cluster_ablation.run())
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -67,6 +67,38 @@ def cluster_fedavg(stacked_params, assignments, n_samples, k: int):
     return jax.tree.map(agg_leaf, stacked_params)
 
 
+def cluster_fedavg_psum(stacked_params, assignments, n_samples, k: int,
+                        axis_name: str):
+    """Eq. 2 for a *local slice* of the client axis inside shard_map —
+    the fleet driver's aggregation.
+
+    Same math as :func:`cluster_fedavg`, with the client axis split
+    over the ``axis_name`` mesh axis (the fleet's ``pod`` axis): each
+    shard segment-sums its local clients into the global ``k`` cluster
+    slots, one psum per pytree (the swarm's client-to-client exchange
+    as a collective), then every client reads back its cluster's sum.
+    ``assignments`` / ``n_samples`` are the local (n_local,) slices
+    carrying *global* cluster ids. With one client per pod this is
+    :func:`cluster_psum_fedavg`'s math on a batched layout; with the
+    whole swarm in one shard it reduces to :func:`cluster_fedavg`.
+    """
+    assignments = jnp.asarray(assignments)
+    w = jnp.asarray(n_samples, jnp.float32)
+    cluster_tot = jax.lax.psum(
+        jax.ops.segment_sum(w, assignments, num_segments=k), axis_name)
+    wn = w / jnp.maximum(cluster_tot[assignments], 1e-9)
+
+    def agg_leaf(leaf):
+        lf = leaf.astype(jnp.float32)
+        weighted = lf * wn.reshape((-1,) + (1,) * (lf.ndim - 1))
+        sums = jax.lax.psum(
+            jax.ops.segment_sum(weighted, assignments, num_segments=k),
+            axis_name)
+        return sums[assignments].astype(leaf.dtype)
+
+    return jax.tree.map(agg_leaf, stacked_params)
+
+
 def cluster_psum_fedavg(params, weight, my_cluster, k: int, axis_name: str):
     """Fleet-regime Eq. 2: inside shard_map over the client axis.
 

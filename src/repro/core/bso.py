@@ -55,7 +55,6 @@ def brain_storm(rng: np.random.Generator, assignments: np.ndarray,
     validation accuracies (shared within the cluster, paper step 1)."""
     assignments = np.asarray(assignments).copy()
     val_scores = np.asarray(val_scores)
-    N = assignments.shape[0]
     events: List[str] = []
 
     # 1. centers = best validation score per cluster

@@ -83,7 +83,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, SwarmConfig
-from repro.core.aggregation import cluster_fedavg, singleton_assignments
+from repro.core.aggregation import (cluster_fedavg, cluster_fedavg_psum,
+                                    singleton_assignments)
 from repro.core.bso import brain_storm_jax
 from repro.core.diststats import swarm_distribution_matrix
 from repro.core.kmeans import kmeans
@@ -665,28 +666,75 @@ jit_run_grid = jax.jit(run_grid, static_argnames=("cfg", "rounds"),
 # ------------------------------------------------------------- fleet regime
 
 
+class FleetRoundOut(NamedTuple):
+    """The tiny per-round outputs the fleet driver pulls to host.
+
+    Everything here is O(clients): the whole device->host traffic of a
+    fleet round is this pytree — the models themselves never leave the
+    mesh (paper §III.B's communication-efficiency claim).
+    """
+    stats: Any        # (N, 2*#tensors) distribution-stat upload of the
+                      #   post-local-phase params (§III.B)
+    val_acc: Any      # (N,) per-client masked val accuracy — the scores
+                      #   the brain-storm step ranks (§III.C step 1)
+    train_loss: Any   # () mean loss of the last local step
+
+
 def make_fleet_round(model: Model, opt: Optimizer, k: int,
-                     n_local_steps: int = 1, *, use_pallas: bool = False):
-    """Fleet round built from the same body as :func:`swarm_round`:
-    the shared :func:`local_phase` (per-step microbatch slices of the
-    uploaded round batch instead of on-device sampling), then the
-    distribution-stat upload computed *inside* the program — the
-    ``param_stats_batched`` kernel under ``use_pallas``, the jnp oracle
-    otherwise — so the O(#tensors) stats ride the same collective as
-    the round step, then Eq. 2 ``cluster_fedavg`` (XLA SPMD inserts the
-    cross-pod collectives).
+                     n_local_steps: int = 1, *, use_pallas: bool = False,
+                     with_eval: bool = False, axis_name: str = None):
+    """Fleet round built from the same body as :func:`swarm_round`,
+    reordered so a multi-round driver can close the coordinator loop
+    with NO extra program: first Eq. 2 ``cluster_fedavg`` applies the
+    *incoming* coordinator decision (``clusters`` computed on host from
+    the previous round's stat upload; XLA SPMD inserts the cross-pod
+    collectives), then the shared :func:`local_phase` runs (per-step
+    microbatch slices of the uploaded round batch instead of on-device
+    sampling), then the distribution-stat upload is computed *inside*
+    the program — the ``param_stats_batched`` kernel under
+    ``use_pallas``, the jnp oracle otherwise — so the O(#tensors) stats
+    ride the same dispatch as the round step.
 
     Only the O(clients) coordinator decision (k-means + brain storm)
     stays host-side, matching the paper's neighbour-assignment server:
-    ``clusters`` is next round's post-BSA assignment computed from the
-    ``stats`` this round returns.
+    the driver turns round r's returned ``stats`` into round r+1's
+    ``clusters`` (see ``repro.launch.fleet_driver``). Seeding round 0
+    with ``singleton_assignments(N)`` makes its aggregation the bitwise
+    identity, so R driver rounds execute exactly the sim engine's
+    protocol sequence (train -> eval -> stats -> coordinator -> Eq. 2,
+    R times) with the final Eq. 2 left pending on the mesh — the
+    aggregate-first rotation only moves the round boundary, not the
+    order of operations.
 
-    Returns ``round_step(sparams, sopt, batch, lr, clusters, weights)
-    -> (sparams, sopt, stats)``.
+    ``with_eval=False`` returns
+    ``round_step(sparams, sopt, batch, lr, clusters, weights)
+    -> (sparams, sopt, stats)`` — the dry-run lowering surface.
+    ``with_eval=True`` adds the stacked eval batches argument
+    (:func:`stack_eval_split` layout) and returns the full driver
+    surface ``round_step(sparams, sopt, batch, val, lr, clusters,
+    weights) -> (sparams, sopt, FleetRoundOut)`` — the per-client val
+    accuracies are computed in-program (post-local-phase params, same
+    point in the protocol as :func:`swarm_round`) because the brain
+    storm ranks them.
+
+    ``axis_name`` switches the body onto the shard_map layout: every
+    client-stacked argument is the *local* slice of a client axis split
+    over that mesh axis, and Eq. 2 runs as the psum formulation
+    (:func:`~repro.core.aggregation.cluster_fedavg_psum`) — the layout
+    ``swarm_fleet.fleet_setup(spmd="shard_map")`` wraps, which is how
+    the driver runs vmapped-conv clients the XLA partitioner cannot
+    auto-shard over ``pod``. ``axis_name=None`` keeps the plain stacked
+    layout for GSPMD auto-partitioning (the LM dry-run path).
     """
     step = make_train_step(model, opt)
 
-    def round_step(sparams, sopt, batch, lr, clusters, weights):
+    def body(sparams, sopt, batch, lr, clusters, weights):
+        # Eq. 2 on the incoming (previous-round) coordinator decision
+        if axis_name is None:
+            sparams = cluster_fedavg(sparams, clusters, weights, k=k)
+        else:
+            sparams = cluster_fedavg_psum(sparams, clusters, weights, k=k,
+                                          axis_name=axis_name)
         # ceil-sized microbatches with a clamped final start cover every
         # row (indivisible batches overlap slightly at the tail instead
         # of silently dropping rows); training n_local_steps times on
@@ -700,11 +748,33 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
                 lambda x: jax.lax.dynamic_slice_in_dim(x, start, mb, 1),
                 batch)
 
-        sparams, sopt, _ = local_phase(step, sparams, sopt, lr,
-                                       jnp.arange(n_local_steps),
-                                       batch_for_step)
+        sparams, sopt, losses = local_phase(step, sparams, sopt, lr,
+                                            jnp.arange(n_local_steps),
+                                            batch_for_step)
         stats = swarm_distribution_matrix(sparams, use_pallas=use_pallas)
-        sparams = cluster_fedavg(sparams, clusters, weights, k=k)
+        return sparams, sopt, stats, losses
+
+    if with_eval:
+        client_eval = make_client_eval(model)
+
+        def round_step_eval(sparams, sopt, batch, val, lr, clusters,
+                            weights):
+            sparams, sopt, stats, losses = body(sparams, sopt, batch, lr,
+                                                clusters, weights)
+            val_acc = client_eval(sparams, val)
+            loss = losses[-1]
+            if axis_name is not None:
+                # per-shard means -> the global mean (equal local counts)
+                loss = jax.lax.pmean(loss, axis_name)
+            return sparams, sopt, FleetRoundOut(stats=stats,
+                                                val_acc=val_acc,
+                                                train_loss=loss)
+
+        return round_step_eval
+
+    def round_step(sparams, sopt, batch, lr, clusters, weights):
+        sparams, sopt, stats, _ = body(sparams, sopt, batch, lr, clusters,
+                                       weights)
         return sparams, sopt, stats
 
     return round_step

@@ -19,7 +19,6 @@ os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 from pathlib import Path
@@ -38,12 +37,10 @@ from repro.train.steps import make_serve_step, make_train_step
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
 
-_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
-                "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
-                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
+# the HLO collective census lives in repro.launch.comm (side-effect
+# free, shared with the fleet driver's traffic ledger); re-exported
+# here because this module historically owned it
+from repro.launch.comm import collective_bytes  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------
@@ -102,48 +99,6 @@ def microbatches_for(cfg: ModelConfig, shape: ShapeConfig,
     while n_mb > 1 and (B // n_mb) % n_dp:
         n_mb //= 2
     return n_mb
-
-
-# ---------------------------------------------------------------------------
-# collective census
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Sum output-shard bytes of every collective op in optimized HLO.
-    Returns {op_name: bytes, ..., "total": bytes} (per device)."""
-    out = {c: 0 for c in _COLLECTIVES}
-    n_ops = {c: 0 for c in _COLLECTIVES}
-    # e.g.:  %all-reduce.5 = f32[2048,512]{1,0} all-reduce(...)
-    pat = re.compile(
-        r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES) + r")\(")
-    # tuple-result collectives:  = (f32[8]{0}, f32[8]{0}) all-to-all(
-    tup = re.compile(
-        r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")\(")
-    for line in hlo_text.splitlines():
-        m = pat.search(line)
-        if m:
-            dt, dims, op = m.group(1), m.group(2), m.group(3)
-            size = _DTYPE_BYTES.get(dt, 4)
-            for d in dims.split(","):
-                if d:
-                    size *= int(d)
-            out[op] += size
-            n_ops[op] += 1
-            continue
-        m = tup.search(line)
-        if m:
-            parts, op = m.group(1), m.group(2)
-            for shp in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", parts):
-                dt, dims = shp.group(1), shp.group(2)
-                size = _DTYPE_BYTES.get(dt, 4)
-                for d in dims.split(","):
-                    if d:
-                        size *= int(d)
-                out[op] += size
-            n_ops[op] += 1
-    out["total"] = sum(out[c] for c in _COLLECTIVES)
-    out["op_counts"] = n_ops
-    return out
 
 
 # ---------------------------------------------------------------------------

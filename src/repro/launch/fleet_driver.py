@@ -1,0 +1,298 @@
+"""End-to-end multi-round BSO-SL on the pod mesh — the fleet driver.
+
+This is the first surface where the WHOLE paper protocol runs in the
+fleet regime rather than as a one-step lowering artifact: the round
+program (``engine.make_fleet_round`` via ``swarm_fleet.fleet_setup``)
+is compiled ONCE on the mesh, and the driver then closes the paper's
+coordinator loop for R rounds:
+
+  1. execute the fused fleet step — Eq. 2 on the incoming cluster
+     decision, local SGD on the uploaded round batch, in-program val
+     eval and distribution-stat upload (one executable, donated
+     params/opt buffers, zero retraces),
+  2. pull ONLY the tiny :class:`~repro.core.engine.FleetRoundOut`
+     (the (N, 2·#tensors) stat matrix + (N,) val scores) to host,
+  3. run the host-side coordinator — k-means on the stats plus the
+     numpy ``brain_storm`` oracle, the paper's neighbour-assignment
+     server (§III.B/C) — and feed the resulting ``clusters`` into the
+     next round's donated buffers.
+
+Because the round program aggregates FIRST (see
+:func:`repro.core.engine.make_fleet_round`), R driver rounds execute
+exactly the sim engine's protocol sequence (train → eval → stats →
+coordinator → Eq. 2, R times) with the final Eq. 2 left pending on the
+mesh. Parity with ``engine.run_rounds`` is therefore *statistical*,
+not bitwise: the fleet samples batches host-side and the coordinator
+consumes different RNG streams (numpy ``brain_storm`` vs the engine's
+``brain_storm_jax``) — the same documented caveat as the existing
+numpy-oracle parity (``tests/test_engine.py``). The per-round
+trajectory property is pinned in ``tests/test_fleet.py``.
+
+Unit scale (the 8-device CPU stand-in, small CNN clients) runs the
+identical driver code: ``make_unit_fleet`` + :func:`run_fleet` is both
+the tier-1 smoke and the traffic benchmark behind ``BENCH_fleet.json``
+(``python -m benchmarks.comm_scaling --fleet``).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.launch.fleet_driver --rounds 3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig
+from repro.core.aggregation import singleton_assignments
+from repro.core.bso import brain_storm
+from repro.core.engine import make_batch, stack_eval_split
+from repro.core.kmeans import kmeans
+from repro.data.dr import make_dr_swarm_data, scale_table
+from repro.launch.comm import fleet_round_comm
+from repro.launch.mesh import make_fleet_mesh
+from repro.launch.swarm_fleet import fleet_setup, force_host_device_count
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+from repro.sharding import use_sharding
+
+# ------------------------------------------------------- host coordinator
+
+
+_jit_kmeans = jax.jit(kmeans, static_argnames=("k", "iters"))
+
+
+def host_coordinator(stats, val_acc, *, k: int, p1: float, p2: float,
+                     kmeans_iters: int = 20, seed: int = 0,
+                     round_idx: int = 0):
+    """The paper's neighbour-assignment server, as a pure host function.
+
+    Deterministic in ``(stats, val_acc, seed, round_idx)``: the k-means
+    key is ``fold_in(PRNGKey(seed), round_idx)`` and the brain-storm
+    stream is ``default_rng([seed, round_idx])``, so replaying a round's
+    uploaded stats reproduces its cluster decision bit-for-bit (the
+    determinism contract ``tests/test_fleet.py`` pins). Reuses the sim
+    engine's k-means and the numpy ``brain_storm`` oracle — O(clients)
+    work on a (N, 2·#tensors) matrix, negligible next to the round step.
+
+    Returns ``(assignments, centers, events)`` — the (N,) int32 cluster
+    decision to feed into the NEXT round's Eq. 2, the (k,) center client
+    ids, and the human-readable BSA event log.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), round_idx)
+    _, a0 = _jit_kmeans(key, jnp.asarray(stats, jnp.float32), k=k,
+                        iters=kmeans_iters)
+    rng = np.random.default_rng([seed, round_idx])
+    plan = brain_storm(rng, np.asarray(a0), np.asarray(val_acc), k, p1, p2)
+    return (plan.assignments.astype(np.int32),
+            plan.centers.astype(np.int32), plan.events)
+
+
+# ------------------------------------------------------------- the driver
+
+
+@dataclass
+class FleetRoundLog:
+    """One driver round: the protocol artifacts pulled to host."""
+    round: int
+    mean_val_acc: float                # Eq. 3 over the val split
+    val_acc: np.ndarray                # (N,)
+    train_loss: float
+    stats: np.ndarray                  # (N, 2*#tensors) §III.B upload
+    assignments: np.ndarray            # (N,) decision FROM this round's
+    #                                    stats (applied next round)
+    centers: np.ndarray                # (k,) BSA center client ids
+    applied_clusters: np.ndarray       # (N,) decision fed INTO this round
+    events: List[str]
+    wall_s: float
+    coord_s: float
+
+
+@dataclass
+class FleetRunResult:
+    history: List[FleetRoundLog]
+    n_compiles: int                    # always 1 — the acceptance property
+    comm: dict                         # per-round ledger (launch.comm)
+    params: Any                        # final client-stacked params (on mesh)
+    compile_s: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def mean_val_accs(self):
+        return [r.mean_val_acc for r in self.history]
+
+
+def make_unit_fleet(n_clients: int = 8, *, arch: str = "squeezenet-dr",
+                    image_size: int = 16, data_scale: int = 16,
+                    seed: int = 0, lr: float = 2e-3):
+    """Unit-scale fleet: the first ``n_clients`` Table-I clinics, one
+    per pod slot of :func:`make_fleet_mesh` (one clinic per device on
+    the 8-device CPU stand-in). Returns ``(model, opt, mesh,
+    clients_data)`` — the arguments :func:`run_fleet` wants."""
+    table = scale_table(data_scale)[:, :n_clients]
+    clients = make_dr_swarm_data(image_size=image_size, seed=seed,
+                                 table=table)
+    model = build_model(get_config(arch))
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=lr))
+    return model, opt, make_fleet_mesh(len(clients)), clients
+
+
+def _sample_round_batch(model_cfg, clients_data, n_rows: int, seed: int,
+                        round_idx: int):
+    """Host-side per-round batch upload: every client draws ``n_rows``
+    uniform-with-replacement rows from its own train split — the same
+    distribution as the engine's on-device per-step sampler, stacked as
+    the (N, n_rows, ...) round batch the fleet step slices per step."""
+    Xs, ys = [], []
+    for i, c in enumerate(clients_data):
+        rng = np.random.default_rng([seed, round_idx, i])
+        X, y = c["train"]
+        idx = rng.integers(0, len(y), size=n_rows)
+        Xs.append(X[idx])
+        ys.append(y[idx])
+    return make_batch(model_cfg, np.stack(Xs), np.stack(ys))
+
+
+def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
+              local_steps: int = 4, batch_size: int = 8, lr: float = 2e-3,
+              n_clusters: int = 3, p1: float = 0.9, p2: float = 0.8,
+              kmeans_iters: int = 20, seed: int = 0,
+              use_pallas_stats: bool = False, eval_batch: int = 64,
+              verbose: bool = False) -> FleetRunResult:
+    """Drive ``rounds`` full BSO-SL rounds on ``mesh`` with exactly ONE
+    compiled fleet-round executable.
+
+    The round step is lowered and compiled once (AOT) with donated
+    params/opt buffers; every round re-invokes the same executable with
+    the freshly uploaded batch and the previous round's host cluster
+    decision. Round 0 feeds ``singleton_assignments`` (Eq. 2 is the
+    bitwise identity), so the executed protocol sequence matches the
+    sim engine's round for round — see the module docstring.
+    """
+    N = len(clients_data)
+    if n_clusters > N:
+        raise ValueError(f"n_clusters={n_clusters} > n_clients={N}")
+    program = fleet_setup(model, opt, mesh, k=N, n_local_steps=local_steps,
+                          use_pallas_stats=use_pallas_stats, with_eval=True,
+                          donate=True, spmd="shard_map")
+    _, _, bsh, vsh, lsh, csh, wsh = program.in_shardings
+    lr_arr = jax.device_put(jnp.float32(lr), lsh)
+
+    with mesh, use_sharding(mesh, program.rules):
+        keys = jax.random.split(jax.random.PRNGKey(seed), N)
+        psh, osh = program.in_shardings[0], program.in_shardings[1]
+        sparams = jax.jit(lambda ks: jax.vmap(model.init)(ks),
+                          out_shardings=psh)(keys)
+        sopt = jax.jit(lambda p: jax.vmap(opt.init)(p),
+                       out_shardings=osh)(sparams)
+        val = jax.device_put(
+            stack_eval_split(model.cfg, clients_data, "val",
+                             batch=eval_batch), vsh)
+        weights = jax.device_put(
+            np.asarray([c["n_train"] for c in clients_data], np.float32),
+            wsh)
+        clusters = np.asarray(singleton_assignments(N))
+
+        def put_batch(r):
+            batch = _sample_round_batch(model.cfg, clients_data,
+                                        local_steps * batch_size, seed, r)
+            return jax.device_put(batch, bsh)
+
+        # ONE lowering -> ONE executable for every round
+        t0 = time.perf_counter()
+        batch0 = put_batch(0)
+        lowered = program.jit_fn.lower(
+            sparams, sopt, batch0, val, lr_arr,
+            jax.device_put(clusters, csh), weights)
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+        batch_bytes = sum(x.size * x.dtype.itemsize
+                          for x in jax.tree.leaves(batch0))
+        params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        comm = fleet_round_comm(compiled, params_abs, N,
+                                batch_bytes=batch_bytes)
+
+        history = []
+        for r in range(rounds):
+            t0 = time.perf_counter()
+            # round 0 re-uploads the batch the lowering used (sampling is
+            # deterministic per (seed, r)) so every round's wall_s covers
+            # the same work: sample + upload + round step + stat pull
+            batch = put_batch(r)
+            applied = clusters
+            sparams, sopt, out = compiled(
+                sparams, sopt, batch, val, lr_arr,
+                jax.device_put(applied, csh), weights)
+            # the ONLY device->host pull: the tiny FleetRoundOut
+            stats = np.asarray(out.stats)
+            val_acc = np.asarray(out.val_acc)
+            t1 = time.perf_counter()
+            clusters, centers, events = host_coordinator(
+                stats, val_acc, k=n_clusters, p1=p1, p2=p2,
+                kmeans_iters=kmeans_iters, seed=seed, round_idx=r)
+            t2 = time.perf_counter()
+            log = FleetRoundLog(
+                round=r, mean_val_acc=float(val_acc.mean()),
+                val_acc=val_acc, train_loss=float(out.train_loss),
+                stats=stats, assignments=clusters, centers=centers,
+                applied_clusters=applied, events=list(events),
+                wall_s=t1 - t0, coord_s=t2 - t1)
+            history.append(log)
+            if verbose:
+                print(f"[fleet] round {r}: val_acc={log.mean_val_acc:.3f} "
+                      f"loss={log.train_loss:.3f} "
+                      f"clusters={np.bincount(clusters, minlength=n_clusters)}"
+                      f" events={len(events)} wall={log.wall_s:.2f}s")
+
+    meta = dict(n_clients=N, rounds=rounds, local_steps=local_steps,
+                batch_size=batch_size, lr=lr, n_clusters=n_clusters, p1=p1,
+                p2=p2, seed=seed, mesh_shape=dict(mesh.shape),
+                n_devices=mesh.size)
+    # measured, not asserted: the AOT `compiled` path performs exactly the
+    # one .compile() above, and any (future) direct jit_fn dispatches
+    # would land in its trace cache — so this catches a regression that
+    # reintroduces per-round retracing
+    n_compiles = 1 + program.jit_fn._cache_size()
+    return FleetRunResult(history=history, n_compiles=n_compiles, comm=comm,
+                          params=sparams, compile_s=compile_s, meta=meta)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--data-scale", type=int, default=16)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="CPU stand-in device count (0 = leave backend "
+                         "alone)")
+    ap.add_argument("--pallas-stats", action="store_true")
+    args = ap.parse_args()
+    if args.devices:
+        force_host_device_count(args.devices)
+    model, opt, mesh, clients = make_unit_fleet(
+        args.clients, image_size=args.image_size,
+        data_scale=args.data_scale, seed=args.seed)
+    res = run_fleet(model, opt, mesh, clients, rounds=args.rounds,
+                    local_steps=args.local_steps,
+                    batch_size=args.batch_size, seed=args.seed,
+                    use_pallas_stats=args.pallas_stats, verbose=True)
+    up = res.comm["stat_upload_bytes"]
+    coll = res.comm["eq2_collective_bytes"]["total"]
+    print(f"[fleet] {res.meta['n_clients']} clients on "
+          f"{res.meta['n_devices']} devices, {args.rounds} rounds, "
+          f"{res.n_compiles} compile ({res.compile_s:.1f}s); per round: "
+          f"stat upload {up} B to host, Eq.2 collectives {coll} B/device")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_fleet_mesh(n_clients: int):
+    """Unit-scale fleet mesh: the ``pod`` (swarm-client) axis spread
+    over however many local devices divide ``n_clients``; ``data`` and
+    ``model`` stay size 1 (CNN-sized clients are not sharded within a
+    pod). On the 8-device CPU stand-in with 8 clients this is one
+    client per device — the miniature of the production (2,16,16)
+    mesh's pod axis; on a single device it degrades to a trivial mesh
+    so the same driver code runs under plain pytest."""
+    n_dev = len(jax.devices())
+    n_pod = max(d for d in range(1, n_dev + 1) if n_clients % d == 0)
+    return jax.make_mesh((n_pod, 1, 1), ("pod", "data", "model"))
+
+
 def make_host_mesh(n_clients: int = 1):
     """Sim-regime mesh (single CPU device) — used only by tests that
     exercise shard_map code paths with a trivial mesh."""

@@ -26,6 +26,7 @@ dry-run artifact.
 """
 import argparse
 import os
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -33,11 +34,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig
-from repro.core.engine import make_fleet_round
+from repro.core.engine import FleetRoundOut, make_fleet_round
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
 from repro.sharding import build_param_specs, use_sharding
+from repro.sharding.rules import AxisRules, DEFAULT_LOGICAL_TO_PHYSICAL
 
 
 def force_host_device_count(n: int = 512):
@@ -47,6 +49,120 @@ def force_host_device_count(n: int = 512):
     Must run before jax initialises its backend to take effect."""
     os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
         f" --xla_force_host_platform_device_count={n}"
+
+
+def fleet_inner_rules() -> AxisRules:
+    """Per-client sharding rules: the ``pod`` axis is the swarm-client
+    axis in the fleet regime, so the inner (within-client) model
+    sharding must never consume it."""
+    return AxisRules({
+        kk: tuple(a for a in v if a != "pod")
+        for kk, v in DEFAULT_LOGICAL_TO_PHYSICAL.items()})
+
+
+class FleetProgram(NamedTuple):
+    """The one compiled-surface contract shared by the dry-run lowering
+    and the multi-round driver (see :func:`fleet_setup`)."""
+    jit_fn: Any          # jax.jit-wrapped engine.make_fleet_round step
+    rules: AxisRules     # inner rules — trace under use_sharding(mesh, rules)
+    in_shardings: Any    # per-argument shardings (batch/val are prefix trees)
+    out_shardings: Any
+
+
+def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
+                use_pallas_stats: bool = False, with_eval: bool = False,
+                donate: bool = False, spmd: str = "auto") -> FleetProgram:
+    """ONE setup path for the fleet round on a ``pod``-axis mesh —
+    the dry-run lowering (:func:`lower_fleet_round`) and the end-to-end
+    driver (``repro.launch.fleet_driver``) both build their program
+    here, so the two can never drift.
+
+    Two partitioning strategies over the same
+    ``engine.make_fleet_round`` body:
+
+    * ``spmd="auto"`` (the LM dry-run path) — GSPMD auto-partitioning:
+      every client-stacked argument is sharded ``P("pod", ...)``,
+      params and opt state additionally carry the inner FSDP/TP spec
+      from :func:`fleet_inner_rules`, and Eq. 2's segment-sum is
+      partitioned by XLA into the cross-pod collectives.
+    * ``spmd="shard_map"`` (the driver path) — manual ``pod``
+      collectives: the round body runs on each shard's *local* client
+      slice (``axis_name="pod"``) and Eq. 2 is the explicit masked-psum
+      formulation (``aggregation.cluster_fedavg_psum``). This is the
+      layout that serves vmapped-*conv* clients (the paper's CNNs):
+      GSPMD cannot partition the grouped convolution a vmapped conv
+      lowers to over the stacked-client axis, while under shard_map
+      each shard sees a plain per-client conv. Inner model sharding is
+      not used on this path (CNN clients are single-device sized).
+
+    The coordinator inputs (``clusters``, ``weights``) ride the client
+    axis and the stat upload comes back sharded over ``pod``.
+    ``donate=True`` donates the params/opt buffers (the driver's round
+    loop updates the swarm in place, round after round, without
+    retracing — the jit-cache contract ``tests/test_fleet.py`` pins).
+
+    Call :attr:`FleetProgram.jit_fn` (or ``.lower(...)`` it) inside
+    ``with mesh, use_sharding(mesh, program.rules):`` so activation
+    constraints resolve against the fleet mesh.
+    """
+    rules = fleet_inner_rules()
+    rep = jax.sharding.NamedSharding(mesh, P())
+    # the uploaded stats matrix is O(clients * #tensors) — sharded over
+    # the client axis like everything else in the round
+    ssh = jax.sharding.NamedSharding(mesh, P("pod"))
+
+    if spmd == "shard_map":
+        from jax.experimental.shard_map import shard_map
+        local_step = make_fleet_round(model, opt, k, n_local_steps,
+                                      use_pallas=use_pallas_stats,
+                                      with_eval=with_eval,
+                                      axis_name="pod")
+        pod = P("pod")
+        if with_eval:
+            in_specs = (pod, pod, pod, pod, P(), pod, pod)
+            out_specs = (pod, pod, FleetRoundOut(stats=pod, val_acc=pod,
+                                                 train_loss=P()))
+        else:
+            in_specs = (pod, pod, pod, P(), pod, pod)
+            out_specs = (pod, pod, pod)
+        # check_rep off: several conv/reduce-window primitives lack
+        # replication rules in this jax version
+        round_step = shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
+        to_shard = lambda spec: rep if spec == P() else ssh
+        in_sh = jax.tree.map(to_shard, in_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+        out_sh = jax.tree.map(to_shard, out_specs,
+                              is_leaf=lambda x: isinstance(x, P))
+    else:
+        params_abs = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+
+        def stacked_shardings(tree_abs):
+            return jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(
+                    mesh, P(*("pod",) + tuple(s))),
+                build_param_specs(tree_abs, mesh, rules))
+
+        psh = stacked_shardings(params_abs)
+        osh = stacked_shardings(opt_abs)
+        # prefix shardings: one entry covers every batch/val leaf
+        bsh = jax.sharding.NamedSharding(mesh, P("pod", "data"))
+        round_step = make_fleet_round(model, opt, k, n_local_steps,
+                                      use_pallas=use_pallas_stats,
+                                      with_eval=with_eval)
+        if with_eval:
+            in_sh = (psh, osh, bsh, ssh, None, rep, rep)
+            out_sh = (psh, osh, FleetRoundOut(stats=ssh, val_acc=ssh,
+                                              train_loss=rep))
+        else:
+            in_sh = (psh, osh, bsh, None, rep, rep)
+            out_sh = (psh, osh, ssh)
+    jit_fn = jax.jit(round_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1) if donate else ())
+    return FleetProgram(jit_fn=jit_fn, rules=rules, in_shardings=in_sh,
+                        out_shardings=out_sh)
 
 
 def lower_fleet_round(arch_id: str = "granite-3-2b", k: int = 3,
@@ -76,37 +192,13 @@ def lower_fleet_round(arch_id: str = "granite-3-2b", k: int = 3,
     clusters_abs = jax.ShapeDtypeStruct((n_clients,), jnp.int32)
     weights_abs = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
 
-    round_step = make_fleet_round(model, opt, k,
-                                  use_pallas=use_pallas_stats)
-
-    # inner (per-client) sharding must not consume the "pod" axis — that
-    # is the client axis in the fleet regime
-    from repro.sharding.rules import AxisRules, DEFAULT_LOGICAL_TO_PHYSICAL
-    inner_rules = AxisRules({
-        kk: tuple(a for a in v if a != "pod")
-        for kk, v in DEFAULT_LOGICAL_TO_PHYSICAL.items()})
-
-    with mesh, use_sharding(mesh, inner_rules):
-        psh = jax.tree.map(
-            lambda s: jax.sharding.NamedSharding(mesh, P(*("pod",) + tuple(s))),
-            build_param_specs(params_abs, mesh, inner_rules))
-        osh = jax.tree.map(
-            lambda s: jax.sharding.NamedSharding(mesh, P(*("pod",) + tuple(s))),
-            build_param_specs(opt_abs, mesh, inner_rules))
-        bsh = jax.tree.map(
-            lambda x: jax.sharding.NamedSharding(mesh, P("pod", "data")),
-            batch_abs)
-        rsh = jax.sharding.NamedSharding(mesh, P())
-        # the uploaded stats matrix is O(clients * #tensors) — sharded
-        # over the client axis like everything else in the round
-        ssh = jax.sharding.NamedSharding(mesh, P("pod"))
-        lowered = jax.jit(
-            round_step,
-            in_shardings=(psh, osh, bsh, None, rsh, rsh),
-            out_shardings=(psh, osh, ssh),
-        ).lower(sparams, sopt, batch_abs,
-                jax.ShapeDtypeStruct((), jnp.float32),
-                clusters_abs, weights_abs)
+    program = fleet_setup(model, opt, mesh, k=k,
+                          use_pallas_stats=use_pallas_stats)
+    with mesh, use_sharding(mesh, program.rules):
+        lowered = program.jit_fn.lower(
+            sparams, sopt, batch_abs,
+            jax.ShapeDtypeStruct((), jnp.float32),
+            clusters_abs, weights_abs)
         compiled = lowered.compile()
     return lowered, compiled
 

@@ -15,7 +15,7 @@ and support jax.checkpoint remat policies.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -410,7 +410,6 @@ def init_encdec_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def encdec_decode_step(params, tokens, caches, pos, cfg: ModelConfig):
-    B = tokens.shape[0]
     x = apply_embedding(params["embedding"], tokens, cfg)
     # sinusoidal positional term at position ``pos``
     d = cfg.d_model

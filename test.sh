@@ -12,6 +12,9 @@
 # Table-II methods must lower to ONE vmapped executable and run.
 # Stage 3 is the grid smoke: the k x p1 hyper-parameter ablation must
 # lower to ONE vmapped executable (compile-count asserted) and run.
+# Stage 4 is the fleet smoke: 2 end-to-end driver rounds on the pod
+# mesh (stats -> host k-means/BSA -> next round's clusters) with
+# compile-count == 1 for the round step.
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -19,4 +22,5 @@ export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
 python -m pytest -x -q tests/test_engine.py::test_engine_smoke
 python -m pytest -x -q tests/test_sweep.py::test_sweep_smoke_one_program
 python -m pytest -x -q tests/test_grid.py::test_grid_smoke_one_program
+python -m pytest -x -q tests/test_fleet.py::test_fleet_driver_smoke
 exec python -m pytest -x -q "$@"

@@ -112,7 +112,6 @@ def test_exact_assigned_configs():
 def test_param_counts_in_expected_range():
     """Full-config parameter counts (eval_shape only, no allocation)
     should land near each model card's nameplate."""
-    import math
     expect = {
         "granite-3-2b": (2e9, 4e9),
         "command-r-35b": (30e9, 40e9),

@@ -10,7 +10,6 @@ tests builds the production mesh.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def _dryrun():

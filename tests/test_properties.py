@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import cluster_fedavg, fedavg
 from repro.core.bso import brain_storm, brain_storm_jax
-from repro.core.kmeans import assign, kmeans
+from repro.core.kmeans import kmeans
 from repro.kernels import ops, ref
 
 settings.register_profile("ci", max_examples=25, deadline=None)

@@ -3,10 +3,9 @@ PartitionSpecs only — no allocation against big meshes)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.sharding.rules import (DEFAULT_RULES, build_param_specs,
+from repro.sharding.rules import (build_param_specs,
                                   logical_axes_for_path, spec_for)
 
 

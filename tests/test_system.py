@@ -1,8 +1,6 @@
 """End-to-end behaviour tests for the BSO-SL system (paper §III/§IV at
 reduced scale): the full protocol runs, improves over initialization,
 collaboration beats isolation, and the model-agnostic claim holds."""
-import dataclasses
-
 import jax
 import numpy as np
 import pytest
