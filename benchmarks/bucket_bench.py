@@ -1,0 +1,140 @@
+"""Ragged-layout benchmark (PR 6): bucketed clients vs the rectangular
+pad-to-max layout, as the SAME scanned ``run_rounds`` fit.
+
+Table I's clinic sizes span 14..974 images, so the rectangular
+``SwarmData`` layout stores every clinic padded to the largest one —
+~70% of train rows are poison pads at unit scale. ``BucketedSwarmData``
+groups clinics into power-of-two size buckets (pad only to the bucket
+ceiling) and the engine runs one gather per bucket inside the identical
+round program, so the fit itself stays ONE executable per layout.
+
+The parity oracle is bitwise: both layouts draw the identical
+``(N, batch)`` index tensor and evaluate the identical microbatch
+prefix, so ``run_rounds`` must produce bit-identical params and
+metrics. Writes ``BENCH_bucket.json`` with the pad accounting, the
+wall-clocks, and the parity check.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig
+from repro.core.engine import (EngineConfig, jit_run_rounds,
+                               make_bucketed_swarm_data, make_swarm_data,
+                               make_swarm_state, pad_fraction)
+from repro.data.dr import make_dr_swarm_data, scale_table
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+
+
+def run(data_scale: int = 4, rounds: int = 2, local_steps: int = 4,
+        image_size: int = 16, seed: int = 0, max_buckets: int = 4,
+        batch_size: int = 8, eval_batch: int = 8,
+        out_json: str | None = "BENCH_bucket.json"):
+    """Both layouts through the identical ``jit_run_rounds`` fit.
+
+    ``eval_batch=8`` keeps the eval-stack quantum small enough that the
+    bucket ceilings (not the microbatch rounding) dominate the stored
+    eval rows at benchmark scale — the same knob the engine exposes.
+    """
+    clients = make_dr_swarm_data(image_size=image_size, seed=seed,
+                                 table=scale_table(data_scale))
+    model = build_model(get_config("squeezenet-dr"))
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=2e-3))
+    cfg = EngineConfig(model=model, opt=opt, local_steps=local_steps,
+                       batch_size=batch_size, lr=2e-3, aggregation="bso",
+                       n_clusters=3, p1=0.9, p2=0.8, kmeans_iters=10)
+
+    rect = make_swarm_data(model.cfg, clients, eval_batch=eval_batch)
+    buck = make_bucketed_swarm_data(model.cfg, clients,
+                                    eval_batch=eval_batch,
+                                    max_buckets=max_buckets)
+    pf_rect = pad_fraction(rect)
+    pf_buck = pad_fraction(buck)
+    reduction = ((pf_rect["stored_rows"] - pf_rect["real_rows"])
+                 / max(pf_buck["stored_rows"] - pf_buck["real_rows"], 1))
+    row("bucket/pad_rows_rect", 0.0,
+        f"train={pf_rect['train']:.3f};total={pf_rect['total']:.3f};"
+        f"stored={pf_rect['stored_rows']}")
+    row("bucket/pad_rows_bucketed", 0.0,
+        f"train={pf_buck['train']:.3f};total={pf_buck['total']:.3f};"
+        f"stored={pf_buck['stored_rows']};buckets={len(buck.client_ids)}")
+    row("bucket/pad_reduction", 0.0, f"pad_rows_x={reduction:.2f}")
+
+    # state rebuilt inside each timed closure: jit_run_rounds donates
+    def fit_rect():
+        state = make_swarm_state(model, opt, clients,
+                                 jax.random.PRNGKey(seed))
+        return jit_run_rounds(state, rect, cfg, rounds)
+
+    def fit_buck():
+        state = make_swarm_state(model, opt, clients,
+                                 jax.random.PRNGKey(seed))
+        return jit_run_rounds(state, buck, cfg, rounds)
+
+    (st_r, ms_r), us_rect = timed(fit_rect, warmup=1, iters=3)
+    row(f"bucket/fit_rect_r{rounds}", us_rect, "programs=1")
+    (st_b, ms_b), us_buck = timed(fit_buck, warmup=1, iters=3)
+    row(f"bucket/fit_bucketed_r{rounds}", us_buck,
+        f"programs=1;speedup={us_rect / us_buck:.2f}x")
+
+    acc_diff = float(np.max(np.abs(np.asarray(ms_r.val_acc)
+                                   - np.asarray(ms_b.val_acc))))
+    params_bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(st_r.params),
+                        jax.tree.leaves(st_b.params)))
+    row("bucket/parity", 0.0,
+        f"max_abs_acc_diff={acc_diff:.2e};params_bitwise={params_bitwise}")
+
+    artifact = {
+        "n_clients": len(clients),
+        "data_scale": data_scale,
+        "image_size": image_size,
+        "rounds": rounds,
+        "local_steps": local_steps,
+        "batch_size": batch_size,
+        "eval_batch": eval_batch,
+        "max_buckets": max_buckets,
+        "buckets": [list(map(int, ids)) for ids in buck.client_ids],
+        "bucket_train_ceilings": [
+            int(jax.tree.leaves(t)[0].shape[1]) for t in buck.train],
+        "pad_fraction_rect": pf_rect,
+        "pad_fraction_bucketed": pf_buck,
+        "pad_rows_reduction_x": reduction,
+        "us_rect_fit": us_rect,
+        "us_bucket_fit": us_buck,
+        "parity_max_abs_acc_diff": acc_diff,
+        "params_bitwise": params_bitwise,
+        "note": "Both fits are ONE jit_run_rounds executable; the "
+                "bucketed layout swaps the single (N, n_max) gather "
+                "for one gather per bucket inside the same program. "
+                "Parity is bitwise by construction (identical "
+                "(N, batch) index draw, identical microbatch prefix), "
+                "so params_bitwise must be true and acc_diff 0.0. The "
+                "transferable win is the stored-pad-row collapse "
+                "(pad_rows_reduction_x): at unit Table-I scale the "
+                "rectangular train stack is ~70% poison pads; CPU "
+                "wall-clock gains are modest because XLA re-pads "
+                "ragged gathers into per-bucket convs, but on "
+                "memory-bound accelerators the stored-row footprint "
+                "IS the constraint.",
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"[bucket_bench] wrote {out_json}")
+    return artifact
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

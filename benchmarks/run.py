@@ -4,6 +4,7 @@
   table3_archs     — paper Table III (model-agnostic CNN sweep)
   comm_scaling     — §I/§III.B scalability & communication claim
   cluster_ablation — beyond-paper k / p1 / p2 ablation
+  bucket_bench     — ragged bucketed layout vs rectangular pad-to-max
   kernel_bench     — kernel-layer microbenchmarks
   roofline_report  — §Roofline table from the dry-run artifacts
 
@@ -45,8 +46,9 @@ def main() -> None:
                                     out_json=None)
         return
 
-    from benchmarks import (cluster_ablation, comm_scaling, kernel_bench,
-                            roofline_report, table2_methods, table3_archs)
+    from benchmarks import (bucket_bench, cluster_ablation, comm_scaling,
+                            kernel_bench, roofline_report, table2_methods,
+                            table3_archs)
 
     suites = {
         "comm_scaling": comm_scaling.main,
@@ -56,6 +58,7 @@ def main() -> None:
         "table3_archs": table3_archs.main,
         "cluster_ablation": lambda: (cluster_ablation.grid_bench(),
                                      cluster_ablation.run()),
+        "bucket_bench": bucket_bench.main,
     }
     if args.fast:
         scale = args.data_scale
@@ -67,17 +70,20 @@ def main() -> None:
             cluster_ablation.grid_bench(data_scale=scale, rounds=2,
                                         local_steps=4, out_json=None),
             cluster_ablation.run(data_scale=scale, rounds=2, local_steps=4))
+        suites["bucket_bench"] = lambda: bucket_bench.run(
+            data_scale=scale, rounds=2, local_steps=4, out_json=None)
     if args.no_artifacts and not args.fast:
         # --fast is already write-free (its overrides above pass
         # bench_json/out_json=None); only the full suite's writers —
-        # table2_methods.main (BENCH_sweep.json) and the default
-        # grid_bench (BENCH_grid.json) — need the artifact-free variant
-        # of the SAME measurement (table2's main() parameters)
+        # table2_methods.main (BENCH_sweep.json), the default grid_bench
+        # (BENCH_grid.json) and bucket_bench (BENCH_bucket.json) — need
+        # the artifact-free variant of the SAME measurement
         suites["table2_methods"] = lambda: table2_methods.run(
             paper_budget_oracle=True)
         suites["cluster_ablation"] = lambda: (
             cluster_ablation.grid_bench(out_json=None),
             cluster_ablation.run())
+        suites["bucket_bench"] = lambda: bucket_bench.run(out_json=None)
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -34,6 +34,17 @@ METHODS = list(SWEEP_METHODS)
 PAPER = {"centralized": 0.4118, "local": 0.1924, "fedavg": 0.3719,
          "bso-sl": 0.3725}
 
+#: Slack on the qualitative Table-II ordering checks. The per-client
+#: Eq. 3 protocol averages 14 tiny clinic test splits (some a handful
+#: of images), so one flipped image on a 5-image split moves a
+#: method's mean acc by ~0.014 — orderings within that noise band are
+#: ties, not violations. 0.02 is one such flip plus margin; it also
+#: absorbs the documented local-overfit caveat (tiny non-IID clinics
+#: reward local memorisation under Eq. 3, which compresses the
+#: centralized-vs-federated gap the paper reports at full data scale).
+#: See ROADMAP.md's noise-calibration note before tightening.
+ORDERING_TOL = 0.02
+
 
 def run(data_scale: int = 1, rounds: int = 10, local_steps: int = 12,
         image_size: int = 20, seed: int = 0, verbose: bool = False,
@@ -130,11 +141,13 @@ def run(data_scale: int = 1, rounds: int = 10, local_steps: int = 12,
             # local overfitting; and the axis centralizes at the SAME
             # budget as the federated methods, unlike the paper's
             # clinic-scaled centralized run — see the oracle field)
+            "ordering_tol": ORDERING_TOL,
             "ordering": {
                 "centralized_upper_bounds_global_fedavg":
-                    results["centralized"] >= results["fedavg"] - 0.02,
+                    results["centralized"]
+                    >= results["fedavg"] - ORDERING_TOL,
                 "bso_over_fedavg":
-                    results["bso-sl"] >= results["fedavg"] - 0.02,
+                    results["bso-sl"] >= results["fedavg"] - ORDERING_TOL,
                 "federated_above_random_floor":
                     results["bso-sl"] > 0.25 and results["fedavg"] > 0.2,
                 "local_overfits_protocol_artifact":
@@ -164,8 +177,8 @@ def main():
     #       — pooled IID sampling vs non-IID client averaging,
     #   (2) BSO-SL >= FedAvg (clustered aggregation handles label skew),
     #   (3) both federated methods clear the 5-class random floor.
-    ok = (results["centralized"] >= results["fedavg"] - 0.02 and
-          results["bso-sl"] >= results["fedavg"] - 0.02 and
+    ok = (results["centralized"] >= results["fedavg"] - ORDERING_TOL and
+          results["bso-sl"] >= results["fedavg"] - ORDERING_TOL and
           results["bso-sl"] > 0.25 and results["fedavg"] > 0.2)
     row("table2/ordering_check", 0.0, f"validated_claims_hold={ok}")
 

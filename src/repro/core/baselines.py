@@ -48,11 +48,12 @@ from repro.configs.base import OptimizerConfig, SwarmConfig
 from repro.core.engine import (EngineConfig, RoundMetrics, SWEEP_METHODS,
                                SwarmData, SwarmState, grid_axes, grid_point,
                                jit_run_grid, jit_run_rounds, jit_run_sweep,
-                               make_client_eval, make_grid_config,
-                               make_grid_state, make_swarm_data,
-                               make_swarm_state, make_sweep_config,
-                               make_sweep_state, method_params,
-                               resolve_local_steps, stack_eval_split)
+                               make_bucketed_swarm_data, make_client_eval,
+                               make_grid_config, make_grid_state,
+                               make_swarm_data, make_swarm_state,
+                               make_sweep_config, make_sweep_state,
+                               method_params, resolve_local_steps,
+                               stack_eval_split)
 from repro.core.swarm import eval_client, make_batch
 from repro.models.model import Model
 from repro.optim.optimizers import make_optimizer
@@ -62,12 +63,19 @@ from repro.train.steps import make_eval_step, make_train_step
 def make_method_setup(model: Model, clients_data, swarm: SwarmConfig,
                       opt_cfg: OptimizerConfig, *, batch_size: int = 16,
                       lr=None, use_pallas: bool = False,
-                      cfg: EngineConfig = None, data: SwarmData = None):
+                      cfg: EngineConfig = None, data: SwarmData = None,
+                      layout: str = "rect"):
     """(EngineConfig, SwarmData) shared by every method/arch slice.
     Existing ``cfg``/``data`` pass through untouched, so repeated
     slices reuse one engine config (one compiled program) and one
     device-resident dataset — the sweep's whole point (table3 shares
-    the data across architectures the same way)."""
+    the data across architectures the same way).
+
+    ``layout`` picks the device data layout when ``data`` is built
+    here: ``"rect"`` is the pad-to-global-max
+    :class:`~repro.core.engine.SwarmData`, ``"bucketed"`` the ragged
+    :class:`~repro.core.engine.BucketedSwarmData` (size-bucketed pads;
+    bitwise the same results — see ``tests/test_bucket.py``)."""
     if cfg is None:
         opt = make_optimizer(opt_cfg)
         cfg = EngineConfig(
@@ -78,7 +86,13 @@ def make_method_setup(model: Model, clients_data, swarm: SwarmConfig,
             p2=swarm.p2, kmeans_iters=swarm.kmeans_iters,
             use_pallas=use_pallas)
     if data is None:
-        data = make_swarm_data(model.cfg, clients_data)
+        if layout == "bucketed":
+            data = make_bucketed_swarm_data(model.cfg, clients_data)
+        elif layout == "rect":
+            data = make_swarm_data(model.cfg, clients_data)
+        else:
+            raise ValueError(f"unknown layout {layout!r} "
+                             "(one of 'rect', 'bucketed')")
     return cfg, data
 
 
@@ -204,7 +218,10 @@ def run_grid_table(model: Model, clients_data, swarm: SwarmConfig,
     swarm-resolved default).
 
     ``key`` splits once into per-point keys (:func:`sweep_keys` — row g
-    is bitwise :func:`run_grid_point` of ``specs[g]`` with ``keys[g]``).
+    is bitwise :func:`run_grid_point` of ``specs[g]`` with ``keys[g]``;
+    grids with heterogeneous ``local_steps`` ride the sorted scan
+    schedule, where the contract weakens to allclose ~1 ulp — see
+    :func:`~repro.core.engine._run_grid_scheduled`).
     Returns ``(results, MethodRun)`` where ``results`` is a list of
     ``{**spec, "acc": Eq.3 test acc}`` rows in grid order and the
     MethodRun carries the (G,)-stacked final state and (G, rounds)
@@ -239,7 +256,14 @@ def run_grid_table(model: Model, clients_data, swarm: SwarmConfig,
     keys = sweep_keys(key, specs)
     states = make_grid_state(model, cfg.opt, clients_data, keys)
     grid = make_grid_config(cfg, len(clients_data), rows)
-    states, ms = jit_run_grid(states, data, cfg, grid, swarm.rounds)
+    # heterogeneous step budgets ride the sorted scan schedule (rows
+    # exit the scan at their own budget instead of paying the static
+    # max as masked no-ops); uniform grids keep the plain masked path
+    row_steps = tuple(int(r.get("local_steps", cfg.local_steps))
+                      for r in rows)
+    schedule = row_steps if min(row_steps) < cfg.local_steps else None
+    states, ms = jit_run_grid(states, data, cfg, grid, swarm.rounds,
+                              schedule)
     if test_stack is None:
         test_stack = stack_eval_split(model.cfg, clients_data, "test")
     scores = np.asarray(_jit_sweep_eval(model)(states.params, test_stack))

@@ -122,6 +122,60 @@ class SwarmData(NamedTuple):
     val: Any
 
 
+@jax.tree_util.register_pytree_node_class
+class BucketedSwarmData:
+    """Size-bucketed, ragged-aware sibling of :class:`SwarmData`.
+
+    A skewed swarm (paper Table I: clinic sizes 14..974) pays for the
+    rectangular layout twice — every client's train stack and eval
+    stack are padded to the *global* maximum. This layout groups
+    clients into a few size buckets (:func:`repro.data.dr.
+    bucket_clients`) and pads each bucket only to its own ceiling:
+
+    train:      tuple of per-bucket batch pytrees, bucket b shaped
+                (N_b, n_max_b, ...) — pad rows never sampled.
+    val:        tuple of per-bucket stacked eval splits, bucket b
+                shaped (N_b, n_batches_b, batch, ...) with label=-1
+                masking (:func:`stack_eval_split` layout per bucket).
+    train_n:    (N,) int32 true train sizes in ORIGINAL client order —
+                the same global sampling bound as :class:`SwarmData`,
+                so index draws are bitwise layout-independent.
+    client_ids: static tuple of per-bucket client-id tuples (ascending
+                within a bucket; a partition of range(N)). Static
+                (pytree aux data), so per-bucket gathers/scatters trace
+                to fixed-shape ops and equal layouts share one compiled
+                program — the same static-shape discipline as
+                :func:`run_grid`.
+
+    The engine dispatches on the layout (:func:`sample_round_batch`,
+    :func:`eval_swarm`): every :func:`swarm_round` / :func:`run_rounds`
+    / :func:`run_sweep` / :func:`run_grid` entry point accepts either,
+    and the bucketed results are BITWISE the rectangular ones (pinned
+    in ``tests/test_bucket.py``) — sampling draws the identical global
+    index tensor and eval drops only all-pad microbatches whose
+    contribution is exactly +0.0.
+    """
+
+    def __init__(self, train, val, train_n, client_ids):
+        self.train = tuple(train)
+        self.val = tuple(val)
+        self.train_n = train_n
+        self.client_ids = tuple(tuple(int(i) for i in ids)
+                                for ids in client_ids)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.client_ids)
+
+    def tree_flatten(self):
+        return (self.train, self.val, self.train_n), self.client_ids
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        train, val, train_n = children
+        return cls(train, val, train_n, aux)
+
+
 class RoundMetrics(NamedTuple):
     """Per-round outputs (all device scalars/arrays, scan-stackable)."""
     mean_val_acc: Any                # () — paper Eq. 3 on the val split
@@ -351,6 +405,62 @@ def make_swarm_data(cfg: ModelConfig, clients_data, *,
                                           batch=eval_batch))
 
 
+def make_bucketed_swarm_data(cfg: ModelConfig, clients_data, *,
+                             eval_batch: int = 64, max_buckets: int = 4,
+                             strategy: str = "pow2") -> BucketedSwarmData:
+    """Build the ragged :class:`BucketedSwarmData` from the per-clinic
+    host dicts: clients grouped into size buckets by their train-split
+    size (:func:`repro.data.dr.bucket_clients`), each bucket's train
+    stack padded only to the bucket's largest client and its eval stack
+    built by :func:`stack_eval_split` over the bucket's members (so the
+    eval pad also shrinks to the bucket ceiling). ``train_n`` stays in
+    global client order — the sampler contract of :class:`SwarmData`.
+    """
+    from repro.data.dr import bucket_clients
+    sizes = [len(c["train"][1]) for c in clients_data]
+    groups = bucket_clients(sizes, max_buckets=max_buckets,
+                            strategy=strategy)
+    trains, vals = [], []
+    for ids in groups:
+        subset = [clients_data[i] for i in ids]
+        n_max = max(len(c["train"][1]) for c in subset)
+        Xs, ys = [], []
+        for c in subset:
+            X, y = pad_eval_split(*c["train"], n_max)
+            Xs.append(X)
+            ys.append(y)
+        trains.append(make_batch(cfg, np.stack(Xs), np.stack(ys)))
+        vals.append(stack_eval_split(cfg, subset, "val", batch=eval_batch))
+    train_n = jnp.asarray(sizes, jnp.int32)
+    return BucketedSwarmData(train=trains, val=vals, train_n=train_n,
+                             client_ids=groups)
+
+
+def pad_fraction(data) -> dict:
+    """Host-side pad accounting for either layout: the fraction of
+    stored train/eval rows that are padding — the waste metric
+    ``BENCH_bucket.json`` quantifies. Returns ``{"train": f, "eval": f,
+    "total": f, "stored_rows": n, "real_rows": n}``."""
+    if isinstance(data, BucketedSwarmData):
+        trains, vals = data.train, data.val
+    else:
+        trains, vals = (data.train,), (data.val,)
+    tr_stored = sum(int(np.prod(jax.tree.leaves(t)[0].shape[:2]))
+                    for t in trains)
+    tr_real = int(np.sum(np.asarray(data.train_n)))
+    ev_stored = ev_real = 0
+    for v in vals:
+        labels = np.asarray(v["labels"])
+        ev_stored += labels.size
+        ev_real += int((labels >= 0).sum())
+    stored = tr_stored + ev_stored
+    real = tr_real + ev_real
+    return {"train": 1.0 - tr_real / tr_stored,
+            "eval": 1.0 - ev_real / ev_stored,
+            "total": 1.0 - real / stored,
+            "stored_rows": stored, "real_rows": real}
+
+
 def make_swarm_state(model: Model, opt: Optimizer, clients_data,
                      key) -> SwarmState:
     """Fresh per-client params/opt state + the round-driving key."""
@@ -398,10 +508,11 @@ def sample_local_batch(key, train, train_n, batch_size: int):
         lambda x: jax.vmap(lambda a, i: a[i])(x, idx), train)
 
 
-def sample_swarm_batch(key, train, train_n, batch_size: int, pool):
-    """Method-axis minibatch sampler: ``pool`` (a traced () bool)
-    selects between the per-client draw and the pooled-global draw
-    inside one program.
+def _swarm_batch_indices(key, train_n, batch_size: int, pool):
+    """The ONE copy of the method-axis index math: (client, row) pairs
+    for one stacked minibatch, layout-independent (both the rectangular
+    and the bucketed gathers consume these, so their batches are
+    bitwise equal).
 
     * pool off — the exact draw :func:`sample_local_batch` makes (same
       key, same randint call), so non-centralized sweep rows sample
@@ -423,7 +534,95 @@ def sample_swarm_batch(key, train, train_n, batch_size: int, pool):
     pool_row = g - (cum[pool_client] - train_n[pool_client])
     client = jnp.where(pool, pool_client, own_client)
     row = jnp.where(pool, pool_row, own_row)
+    return client, row
+
+
+def sample_swarm_batch(key, train, train_n, batch_size: int, pool):
+    """Method-axis minibatch sampler over the rectangular stack:
+    ``pool`` (a traced () bool) selects between the per-client draw and
+    the pooled-global draw inside one program (see
+    :func:`_swarm_batch_indices`)."""
+    client, row = _swarm_batch_indices(key, train_n, batch_size, pool)
     return jax.tree.map(lambda x: x[client, row], train)
+
+
+def _bucket_maps(client_ids, n_clients: int):
+    """Static (bucket, position) lookup per client id — host numpy, so
+    bucketed gathers trace to fixed-shape ops."""
+    bucket_of = np.zeros(n_clients, np.int32)
+    pos_of = np.zeros(n_clients, np.int32)
+    for b, ids in enumerate(client_ids):
+        for p, c in enumerate(ids):
+            bucket_of[c] = b
+            pos_of[c] = p
+    return bucket_of, pos_of
+
+
+def _gather_bucketed_rows(data: BucketedSwarmData, client, row):
+    """``train[client, row]`` over the bucketed stacks — per-bucket
+    gathers select-merged by static bucket membership, so the values
+    are bitwise the rectangular gather's (every (client, row) pair maps
+    to its bucket's (position, row) slot; out-of-bucket lanes gather a
+    safe dummy and are masked out)."""
+    N = data.train_n.shape[0]
+    bucket_of, pos_of = _bucket_maps(data.client_ids, N)
+    b_of = jnp.asarray(bucket_of)[client]
+    pos = jnp.asarray(pos_of)[client]
+    out = None
+    for b, tr in enumerate(data.train):
+        in_b = b_of == b
+        p = jnp.where(in_b, pos, 0)
+        r = jnp.where(in_b, row, 0)
+        g = jax.tree.map(lambda x: x[p, r], tr)
+        if out is None:
+            out = g
+        else:
+            def sel(new, old):
+                m = in_b.reshape(in_b.shape + (1,) * (new.ndim
+                                                      - in_b.ndim))
+                return jnp.where(m, new, old)
+            out = jax.tree.map(sel, g, out)
+    return out
+
+
+def _sample_local_bucketed(key, data: BucketedSwarmData, batch_size: int):
+    """Bucketed :func:`sample_local_batch`: the IDENTICAL global index
+    draw (same key, same (N, batch) randint over the global-order
+    ``train_n`` bounds), gathered per bucket and restored to original
+    client order — bitwise the rectangular batch, at bucket-local
+    storage cost."""
+    N = data.train_n.shape[0]
+    idx = jax.random.randint(key, (N, batch_size), 0,
+                             data.train_n[:, None])
+    parts = []
+    for ids, tr in zip(data.client_ids, data.train):
+        ids_arr = np.asarray(ids)
+        parts.append(jax.tree.map(
+            lambda x: jax.vmap(lambda a, i: a[i])(x, idx[ids_arr]), tr))
+    cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    perm = np.concatenate([np.asarray(ids) for ids in data.client_ids])
+    inv = np.argsort(perm)
+    return jax.tree.map(lambda x: x[inv], cat)
+
+
+def sample_round_batch(key, data, batch_size: int, pool=None):
+    """Layout-dispatching per-step minibatch: the one sampler surface
+    :func:`swarm_round` (and the scheduled grid path) calls. ``data``
+    is a :class:`SwarmData` or :class:`BucketedSwarmData`; ``pool`` is
+    the traced method-axis pooling flag (None = the plain per-client
+    path). Both layouts consume the same index draws, so the returned
+    batches are bitwise identical."""
+    if isinstance(data, BucketedSwarmData):
+        if pool is None:
+            return _sample_local_bucketed(key, data, batch_size)
+        client, row = _swarm_batch_indices(key, data.train_n, batch_size,
+                                           pool)
+        return _gather_bucketed_rows(data, client, row)
+    if pool is None:
+        return sample_local_batch(key, data.train, data.train_n,
+                                  batch_size)
+    return sample_swarm_batch(key, data.train, data.train_n, batch_size,
+                              pool)
 
 
 def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
@@ -486,7 +685,70 @@ def make_client_eval(model: Model):
     return jax.vmap(client_eval)
 
 
+def eval_swarm(model: Model, params, data):
+    """Layout-dispatching per-client val accuracy — the masked segment
+    reduction over whichever stacks ``data`` carries.
+
+    Rectangular: the one vmapped :func:`make_client_eval` program.
+    Bucketed: one fixed-shape vmapped eval per bucket (same static-
+    shape discipline as :func:`run_grid` — equal bucket signatures
+    share the trace), client accuracies scattered back to global
+    order. BITWISE the rectangular result: a bucket's stack is a
+    microbatch-prefix of the rectangular stack, and every dropped
+    all-pad microbatch contributed exactly +0.0 to the (hits, total)
+    accumulator (``accuracy`` masks label=-1 rows and divides by
+    ``max(valid, 1)``).
+    """
+    ev = make_client_eval(model)
+    if isinstance(data, BucketedSwarmData):
+        N = data.train_n.shape[0]
+        acc = jnp.zeros((N,), jnp.float32)
+        for ids, val_b in zip(data.client_ids, data.val):
+            ids_arr = np.asarray(ids)
+            sub = jax.tree.map(lambda x: x[ids_arr], params)
+            acc = acc.at[ids_arr].set(ev(sub, val_b))
+        return acc
+    return ev(params, data.val)
+
+
 # ---------------------------------------------------------------- the round
+
+
+def _coordinate_and_aggregate(params, opt_state, val, n_samples,
+                              cfg: "EngineConfig", masks: MethodParams,
+                              grid, k_kmeans, k_bso):
+    """The method/grid-axis coordinator + Eq. 2 tail of
+    :func:`swarm_round`, factored out so the sorted-schedule grid path
+    can vmap exactly the same ops over its rows: distribution stats →
+    masked k-means → brain storm → traced-mask selection → N-segment
+    ``cluster_fedavg``. Returns ``(params, opt_state, assignments,
+    centers, n_replaced, n_swapped)``."""
+    N = n_samples.shape[0]
+    zero = jnp.zeros((), jnp.int32)
+    # the method/grid axis: one program, per-row traced masks. The
+    # aggregation segment count is N so every base_assign plan
+    # (arange = identity, zeros = global) shares the bso layout.
+    # cfg.n_clusters is the static pad k_max; a grid row masks the
+    # coordinator down to its traced point.n_clusters.
+    k = cfg.n_clusters
+    assert k <= N, "method axis needs n_clusters <= n_clients"
+    k_act = None if grid is None else grid.n_clusters
+    p1 = cfg.p1 if grid is None else grid.p1
+    p2 = cfg.p2 if grid is None else grid.p2
+    feats = swarm_distribution_matrix(params, use_pallas=cfg.use_pallas)
+    _, a0 = kmeans(k_kmeans, feats, k=k, iters=cfg.kmeans_iters,
+                   use_pallas=cfg.use_pallas, k_active=k_act)
+    bsa_a, bsa_c, n_rep, n_swap = brain_storm_jax(
+        k_bso, a0, val, k, p1, p2)
+    use = masks.use_coord
+    assignments = jnp.where(use, bsa_a, masks.base_assign)
+    centers = jnp.where(use, bsa_c, -1)
+    n_rep = jnp.where(use, n_rep, zero)
+    n_swap = jnp.where(use, n_swap, zero)
+    params = cluster_fedavg(params, assignments, n_samples, k=N)
+    if cfg.reset_opt_each_round:
+        opt_state = jax.vmap(cfg.opt.init)(params)
+    return params, opt_state, assignments, centers, n_rep, n_swap
 
 
 def swarm_round(state: SwarmState, data: SwarmData,
@@ -524,12 +786,11 @@ def swarm_round(state: SwarmState, data: SwarmData,
     # rows apply only the first grid.local_steps of them)
     sample_keys = jax.random.split(k_local, cfg.local_steps)
     if masks is None:
-        batch_for_step = lambda kt: sample_local_batch(
-            kt, data.train, data.train_n, cfg.batch_size)
+        batch_for_step = lambda kt: sample_round_batch(
+            kt, data, cfg.batch_size)
     else:
-        batch_for_step = lambda kt: sample_swarm_batch(
-            kt, data.train, data.train_n, cfg.batch_size,
-            masks.pool_data)
+        batch_for_step = lambda kt: sample_round_batch(
+            kt, data, cfg.batch_size, masks.pool_data)
     params, opt_state, losses = local_phase(
         step, state.params, state.opt_state, lr, sample_keys,
         batch_for_step, unroll=cfg.local_unroll,
@@ -538,36 +799,16 @@ def swarm_round(state: SwarmState, data: SwarmData,
     train_loss = losses[-1] if grid is None else losses[grid.local_steps - 1]
 
     # --- eval: per-client val accuracy (shared within clusters, §III.C)
-    val = make_client_eval(model)(params, data.val)
+    val = eval_swarm(model, params, data)
 
     # --- coordinator + aggregation
     N = data.train_n.shape[0]
     zero = jnp.zeros((), jnp.int32)
     if masks is not None:
-        method = masks
-        # the method/grid axis: one program, per-row traced masks. The
-        # aggregation segment count is N so every base_assign plan
-        # (arange = identity, zeros = global) shares the bso layout.
-        # cfg.n_clusters is the static pad k_max; a grid row masks the
-        # coordinator down to its traced point.n_clusters.
-        k = cfg.n_clusters
-        assert k <= N, "method axis needs n_clusters <= n_clients"
-        k_act = None if grid is None else grid.n_clusters
-        p1 = cfg.p1 if grid is None else grid.p1
-        p2 = cfg.p2 if grid is None else grid.p2
-        feats = swarm_distribution_matrix(params, use_pallas=cfg.use_pallas)
-        _, a0 = kmeans(k_kmeans, feats, k=k, iters=cfg.kmeans_iters,
-                       use_pallas=cfg.use_pallas, k_active=k_act)
-        bsa_a, bsa_c, n_rep, n_swap = brain_storm_jax(
-            k_bso, a0, val, k, p1, p2)
-        use = method.use_coord
-        assignments = jnp.where(use, bsa_a, method.base_assign)
-        centers = jnp.where(use, bsa_c, -1)
-        n_rep = jnp.where(use, n_rep, zero)
-        n_swap = jnp.where(use, n_swap, zero)
-        params = cluster_fedavg(params, assignments, state.n_samples, k=N)
-        if cfg.reset_opt_each_round:
-            opt_state = jax.vmap(opt.init)(params)
+        (params, opt_state, assignments, centers, n_rep,
+         n_swap) = _coordinate_and_aggregate(
+            params, opt_state, val, state.n_samples, cfg, masks, grid,
+            k_kmeans, k_bso)
     elif cfg.aggregation == "none":
         assignments = jnp.zeros((N,), jnp.int32)
         centers = jnp.zeros((0,), jnp.int32)
@@ -631,23 +872,144 @@ def run_sweep(state: SwarmState, data: SwarmData, cfg: EngineConfig,
 
 
 def run_grid(state: SwarmState, data: SwarmData, cfg: EngineConfig,
-             grid: GridPoint, rounds: int):
+             grid: GridPoint, rounds: int, schedule=None):
     """A whole hyper-parameter ablation as ONE device program.
 
     ``state`` is grid-stacked (:func:`make_grid_state`), ``grid`` is
     the stacked :class:`GridPoint` (:func:`make_grid_config`); both
-    carry a leading (G,) axis. The single :class:`SwarmData` is closed
-    over un-vmapped, so every grid point reads the same device buffers
-    — |grid| serial fits collapse into one vmapped executable whose
-    static shapes come from the row maxima in ``cfg``. Row g is
-    exactly ``run_rounds(state[g], data, cfg, rounds, grid[g])`` — the
-    parity contract ``tests/test_grid.py`` asserts against the serial
+    carry a leading (G,) axis. The single :class:`SwarmData` (or
+    :class:`BucketedSwarmData`) is closed over un-vmapped, so every
+    grid point reads the same device buffers — |grid| serial fits
+    collapse into one vmapped executable whose static shapes come from
+    the row maxima in ``cfg``. Row g is exactly ``run_rounds(state[g],
+    data, cfg, rounds, grid[g])`` — the parity contract
+    ``tests/test_grid.py`` asserts against the serial
     ``baselines.run_grid_point`` slice.
+
+    ``schedule`` (a STATIC tuple of per-row applied step counts,
+    mirroring each row's traced ``grid.local_steps``) switches the
+    local phase onto the sorted scan schedule
+    (:func:`_run_grid_scheduled`): rows with small step budgets exit
+    the scan early instead of paying ``cfg.local_steps`` masked no-op
+    steps. Still ONE program; parity with the masked path is allclose
+    (~1 ulp — see :func:`_run_grid_scheduled`).
     """
+    if schedule is not None:
+        return _run_grid_scheduled(state, data, cfg, grid, rounds,
+                                   tuple(schedule))
+
     def one(s, g):
         return run_rounds(s, data, cfg, rounds, g)
 
     return jax.vmap(one)(state, grid)
+
+
+def _run_grid_scheduled(state: SwarmState, data, cfg: EngineConfig,
+                        grid: GridPoint, rounds: int, schedule: tuple):
+    """:func:`run_grid` with a ``local_steps``-sorted scan schedule.
+
+    The masked path pays ``G x cfg.local_steps`` train steps per round
+    — rows with ``local_steps < max`` compute every step and discard
+    the tail as masked no-ops (a vmap lane cannot exit a scan early).
+    Here rows are pre-sorted by DESCENDING static step count and the
+    local phase runs as static prefix segments: between the distinct
+    step counts ``s_1 < s_2 < ...`` of the schedule, only the prefix of
+    rows still inside their budget scans on (total row-steps =
+    ``sum(schedule)`` instead of ``G * max``). Everything the per-row
+    :func:`swarm_round` would compute is replicated — the 4-way key
+    split, the per-step sample keys, the layout-dispatched sampler,
+    eval, and the factored :func:`_coordinate_and_aggregate` — and a
+    skipped step's masked no-op never touched params, so every applied
+    step consumes identical keys and batches. Parity with the masked
+    path is ALLCLOSE (~1 ulp, ``tests/test_grid.py``), not bitwise: a
+    prefix segment batches the train step over ``g < G`` rows, and
+    XLA's conv kernels reduce in a lane-width-dependent order — only
+    rows that never leave the full-width segment match bit for bit.
+
+    ``schedule`` must be static (it shapes the program) and must equal
+    the traced per-row ``grid.local_steps`` values — the loss gather at
+    ``local_steps - 1`` reads only computed slots when they agree.
+    ``run_grid_table`` derives it from the row specs automatically.
+    """
+    G = len(schedule)
+    for s in schedule:
+        if not 1 <= int(s) <= cfg.local_steps:
+            raise ValueError(f"schedule entry {s} outside "
+                             f"[1, {cfg.local_steps}]")
+    order = np.argsort(-np.asarray(schedule), kind="stable")
+    inv = np.argsort(order)
+    steps_sorted = [int(schedule[i]) for i in order]
+    # static prefix segments: during steps [a, b), the first g rows
+    # (sorted desc) are still inside their budget
+    segs = []
+    prev = 0
+    for s in sorted(set(steps_sorted)):
+        segs.append((prev, s, sum(1 for t in steps_sorted if t > prev)))
+        prev = s
+
+    state = jax.tree.map(lambda x: x[order], state)
+    grid = jax.tree.map(lambda x: x[order], grid)
+    model, opt = cfg.model, cfg.opt
+    step = make_train_step(model, opt)
+    vstep = jax.vmap(step, in_axes=(0, 0, 0, None))     # over clients
+    gstep = jax.vmap(vstep, in_axes=(0, 0, 0, 0))       # over grid rows
+
+    def round_body(st, _):
+        # per-row key discipline, replicated from swarm_round exactly
+        keys4 = jax.vmap(lambda kk: jax.random.split(kk, 4))(st.key)
+        next_key, k_local, k_kmeans, k_bso = (keys4[:, i]
+                                              for i in range(4))
+        sample_keys = jax.vmap(
+            lambda kk: jax.random.split(kk, cfg.local_steps))(k_local)
+        params, opt_state = st.params, st.opt_state
+        losses = jnp.zeros((G, cfg.local_steps), jnp.float32)
+
+        for a, b, g in segs:
+            p_g = jax.tree.map(lambda x: x[:g], params)
+            o_g = jax.tree.map(lambda x: x[:g], opt_state)
+            lr_g, pool_g = grid.lr[:g], grid.method.pool_data[:g]
+            kts = jnp.swapaxes(sample_keys[:g, a:b], 0, 1)
+
+            def seg_body(carry, kt, pool_g=pool_g, lr_g=lr_g):
+                p, o = carry
+                batch = jax.vmap(lambda kk, pl: sample_round_batch(
+                    kk, data, cfg.batch_size, pl))(kt, pool_g)
+                p2, o2, m = gstep(p, o, batch, lr_g)
+                return (p2, o2), jnp.mean(m["loss"], axis=-1)
+
+            (p_g, o_g), seg_losses = jax.lax.scan(
+                seg_body, (p_g, o_g), kts, unroll=cfg.local_unroll)
+            params = jax.tree.map(
+                lambda sg, full: jnp.concatenate([sg, full[g:]], axis=0),
+                p_g, params)
+            opt_state = jax.tree.map(
+                lambda sg, full: jnp.concatenate([sg, full[g:]], axis=0),
+                o_g, opt_state)
+            losses = losses.at[:g, a:b].set(jnp.swapaxes(seg_losses,
+                                                         0, 1))
+
+        train_loss = jnp.take_along_axis(
+            losses, grid.local_steps[:, None] - 1, axis=1)[:, 0]
+        val = jax.vmap(lambda p: eval_swarm(model, p, data))(params)
+        (params, opt_state, assignments, centers, n_rep,
+         n_swap) = jax.vmap(
+            lambda p, o, v, ns, gg, kk, kb: _coordinate_and_aggregate(
+                p, o, v, ns, cfg, gg.method, gg, kk, kb)
+        )(params, opt_state, val, st.n_samples, grid, k_kmeans, k_bso)
+        new_state = SwarmState(params=params, opt_state=opt_state,
+                               key=next_key, round=st.round + 1,
+                               n_samples=st.n_samples)
+        metrics = RoundMetrics(
+            mean_val_acc=jnp.mean(val, axis=1), val_acc=val,
+            train_loss=train_loss, assignments=assignments,
+            centers=centers, n_replaced=n_rep, n_swapped=n_swap)
+        return new_state, metrics
+
+    state, ms = jax.lax.scan(round_body, state, None, length=rounds)
+    # (rounds, G, ...) -> (G, rounds, ...), then undo the sort
+    ms = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1)[inv], ms)
+    state = jax.tree.map(lambda x: x[inv], state)
+    return state, ms
 
 
 # module-level jitted entry points: the cache is shared across every
@@ -659,7 +1021,8 @@ jit_run_rounds = jax.jit(run_rounds, static_argnames=("cfg", "rounds"),
                          donate_argnums=(0,))
 jit_run_sweep = jax.jit(run_sweep, static_argnames=("cfg", "rounds"),
                         donate_argnums=(0,))
-jit_run_grid = jax.jit(run_grid, static_argnames=("cfg", "rounds"),
+jit_run_grid = jax.jit(run_grid,
+                       static_argnames=("cfg", "rounds", "schedule"),
                        donate_argnums=(0,))
 
 
@@ -682,7 +1045,8 @@ class FleetRoundOut(NamedTuple):
 
 def make_fleet_round(model: Model, opt: Optimizer, k: int,
                      n_local_steps: int = 1, *, use_pallas: bool = False,
-                     with_eval: bool = False, axis_name: str = None):
+                     with_eval: bool = False, with_loss: bool = False,
+                     axis_name: str = None):
     """Fleet round built from the same body as :func:`swarm_round`,
     reordered so a multi-round driver can close the coordinator loop
     with NO extra program: first Eq. 2 ``cluster_fedavg`` applies the
@@ -716,6 +1080,14 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
     accuracies are computed in-program (post-local-phase params, same
     point in the protocol as :func:`swarm_round`) because the brain
     storm ranks them.
+    ``with_loss=True`` (exclusive with ``with_eval``) keeps the
+    eval-free signature but returns the last-step loss alongside the
+    stats — ``round_step(sparams, sopt, batch, lr, clusters, weights)
+    -> (sparams, sopt, stats, loss)``. This is the bucketed-eval driver
+    surface: a rectangular in-program val stack would reintroduce
+    pad-to-global-max, so the driver evaluates per size bucket with its
+    own fixed-shape compiled programs (one per bucket signature) and
+    the round program carries only the O(1) loss out.
 
     ``axis_name`` switches the body onto the shard_map layout: every
     client-stacked argument is the *local* slice of a client axis split
@@ -771,6 +1143,18 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
                                                 train_loss=loss)
 
         return round_step_eval
+
+    if with_loss:
+
+        def round_step_loss(sparams, sopt, batch, lr, clusters, weights):
+            sparams, sopt, stats, losses = body(sparams, sopt, batch, lr,
+                                                clusters, weights)
+            loss = losses[-1]
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+            return sparams, sopt, stats, loss
+
+        return round_step_loss
 
     def round_step(sparams, sopt, batch, lr, clusters, weights):
         sparams, sopt, stats, _ = body(sparams, sopt, batch, lr, clusters,

@@ -52,9 +52,9 @@ from repro.configs import get_config
 from repro.configs.base import OptimizerConfig
 from repro.core.aggregation import singleton_assignments
 from repro.core.bso import brain_storm
-from repro.core.engine import make_batch, stack_eval_split
+from repro.core.engine import make_batch, make_client_eval, stack_eval_split
 from repro.core.kmeans import kmeans
-from repro.data.dr import make_dr_swarm_data, scale_table
+from repro.data.dr import bucket_clients, make_dr_swarm_data, scale_table
 from repro.launch.comm import fleet_round_comm
 from repro.launch.mesh import make_fleet_mesh
 from repro.launch.swarm_fleet import fleet_setup, force_host_device_count
@@ -164,6 +164,7 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
               n_clusters: int = 3, p1: float = 0.9, p2: float = 0.8,
               kmeans_iters: int = 20, seed: int = 0,
               use_pallas_stats: bool = False, eval_batch: int = 64,
+              eval_buckets: int = 0, bucket_strategy: str = "pow2",
               verbose: bool = False) -> FleetRunResult:
     """Drive ``rounds`` full BSO-SL rounds on ``mesh`` with exactly ONE
     compiled fleet-round executable.
@@ -174,14 +175,31 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
     decision. Round 0 feeds ``singleton_assignments`` (Eq. 2 is the
     bitwise identity), so the executed protocol sequence matches the
     sim engine's round for round — see the module docstring.
+
+    ``eval_buckets > 0`` switches val scoring onto the bucketed ragged
+    layout: clients are grouped into size buckets
+    (:func:`repro.data.dr.bucket_clients` on the val-split sizes), each
+    bucket's eval stack is padded only to its own ceiling, and the
+    driver compiles ONE fixed-shape eval program per bucket signature
+    (round program built ``with_loss`` — no rectangular val stack rides
+    the mesh). The compile budget becomes ``1 + n_buckets`` executables
+    total, still zero per-round retraces, and the per-client accuracies
+    are identical to the in-program rectangular eval (same
+    post-local-phase params, same masked reduction —
+    ``tests/test_fleet.py`` pins the parity).
     """
     N = len(clients_data)
     if n_clusters > N:
         raise ValueError(f"n_clusters={n_clusters} > n_clients={N}")
+    bucketed = eval_buckets > 0
     program = fleet_setup(model, opt, mesh, k=N, n_local_steps=local_steps,
-                          use_pallas_stats=use_pallas_stats, with_eval=True,
+                          use_pallas_stats=use_pallas_stats,
+                          with_eval=not bucketed, with_loss=bucketed,
                           donate=True, spmd="shard_map")
-    _, _, bsh, vsh, lsh, csh, wsh = program.in_shardings
+    if bucketed:
+        _, _, bsh, lsh, csh, wsh = program.in_shardings
+    else:
+        _, _, bsh, vsh, lsh, csh, wsh = program.in_shardings
     lr_arr = jax.device_put(jnp.float32(lr), lsh)
 
     with mesh, use_sharding(mesh, program.rules):
@@ -191,9 +209,29 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                           out_shardings=psh)(keys)
         sopt = jax.jit(lambda p: jax.vmap(opt.init)(p),
                        out_shardings=osh)(sparams)
-        val = jax.device_put(
-            stack_eval_split(model.cfg, clients_data, "val",
-                             batch=eval_batch), vsh)
+        eval_progs = []
+        if bucketed:
+            # one fixed-shape eval program per bucket: gather the
+            # bucket's client params, score its own-ceiling val stack
+            rep = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            groups = bucket_clients(
+                [len(c["val"][1]) for c in clients_data],
+                max_buckets=eval_buckets, strategy=bucket_strategy)
+            ev = make_client_eval(model)
+            for ids in groups:
+                ids_arr = np.asarray(ids)
+                val_b = jax.device_put(
+                    stack_eval_split(model.cfg,
+                                     [clients_data[i] for i in ids],
+                                     "val", batch=eval_batch), rep)
+                fn = jax.jit(lambda p, v, _ids=ids_arr: ev(
+                    jax.tree.map(lambda x: x[_ids], p), v))
+                eval_progs.append((ids_arr, val_b, fn))
+        else:
+            val = jax.device_put(
+                stack_eval_split(model.cfg, clients_data, "val",
+                                 batch=eval_batch), vsh)
         weights = jax.device_put(
             np.asarray([c["n_train"] for c in clients_data], np.float32),
             wsh)
@@ -207,9 +245,14 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
         # ONE lowering -> ONE executable for every round
         t0 = time.perf_counter()
         batch0 = put_batch(0)
-        lowered = program.jit_fn.lower(
-            sparams, sopt, batch0, val, lr_arr,
-            jax.device_put(clusters, csh), weights)
+        if bucketed:
+            lowered = program.jit_fn.lower(
+                sparams, sopt, batch0, lr_arr,
+                jax.device_put(clusters, csh), weights)
+        else:
+            lowered = program.jit_fn.lower(
+                sparams, sopt, batch0, val, lr_arr,
+                jax.device_put(clusters, csh), weights)
         compiled = lowered.compile()
         compile_s = time.perf_counter() - t0
         batch_bytes = sum(x.size * x.dtype.itemsize
@@ -226,12 +269,25 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
             # the same work: sample + upload + round step + stat pull
             batch = put_batch(r)
             applied = clusters
-            sparams, sopt, out = compiled(
-                sparams, sopt, batch, val, lr_arr,
-                jax.device_put(applied, csh), weights)
-            # the ONLY device->host pull: the tiny FleetRoundOut
-            stats = np.asarray(out.stats)
-            val_acc = np.asarray(out.val_acc)
+            if bucketed:
+                sparams, sopt, stats_dev, loss_dev = compiled(
+                    sparams, sopt, batch, lr_arr,
+                    jax.device_put(applied, csh), weights)
+                stats = np.asarray(stats_dev)
+                # per-bucket scoring of the returned post-local-phase
+                # params — the same protocol point as the in-program eval
+                val_acc = np.zeros(N, np.float32)
+                for ids_arr, val_b, fn in eval_progs:
+                    val_acc[ids_arr] = np.asarray(fn(sparams, val_b))
+                train_loss = float(loss_dev)
+            else:
+                sparams, sopt, out = compiled(
+                    sparams, sopt, batch, val, lr_arr,
+                    jax.device_put(applied, csh), weights)
+                # the ONLY device->host pull: the tiny FleetRoundOut
+                stats = np.asarray(out.stats)
+                val_acc = np.asarray(out.val_acc)
+                train_loss = float(out.train_loss)
             t1 = time.perf_counter()
             clusters, centers, events = host_coordinator(
                 stats, val_acc, k=n_clusters, p1=p1, p2=p2,
@@ -239,7 +295,7 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
             t2 = time.perf_counter()
             log = FleetRoundLog(
                 round=r, mean_val_acc=float(val_acc.mean()),
-                val_acc=val_acc, train_loss=float(out.train_loss),
+                val_acc=val_acc, train_loss=train_loss,
                 stats=stats, assignments=clusters, centers=centers,
                 applied_clusters=applied, events=list(events),
                 wall_s=t1 - t0, coord_s=t2 - t1)
@@ -253,12 +309,16 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
     meta = dict(n_clients=N, rounds=rounds, local_steps=local_steps,
                 batch_size=batch_size, lr=lr, n_clusters=n_clusters, p1=p1,
                 p2=p2, seed=seed, mesh_shape=dict(mesh.shape),
-                n_devices=mesh.size)
+                n_devices=mesh.size,
+                eval_buckets=len(eval_progs) if bucketed else 0)
     # measured, not asserted: the AOT `compiled` path performs exactly the
     # one .compile() above, and any (future) direct jit_fn dispatches
     # would land in its trace cache — so this catches a regression that
-    # reintroduces per-round retracing
-    n_compiles = 1 + program.jit_fn._cache_size()
+    # reintroduces per-round retracing. Bucketed eval adds exactly one
+    # compiled program per bucket signature (their jit caches never grow
+    # past 1 — same shapes every round).
+    n_compiles = (1 + program.jit_fn._cache_size()
+                  + sum(fn._cache_size() for _, _, fn in eval_progs))
     return FleetRunResult(history=history, n_compiles=n_compiles, comm=comm,
                           params=sparams, compile_s=compile_s, meta=meta)
 
@@ -276,6 +336,9 @@ def main():
                     help="CPU stand-in device count (0 = leave backend "
                          "alone)")
     ap.add_argument("--pallas-stats", action="store_true")
+    ap.add_argument("--eval-buckets", type=int, default=0,
+                    help="bucket the val eval into at most this many "
+                         "size buckets (0 = rectangular in-program eval)")
     args = ap.parse_args()
     if args.devices:
         force_host_device_count(args.devices)
@@ -285,7 +348,8 @@ def main():
     res = run_fleet(model, opt, mesh, clients, rounds=args.rounds,
                     local_steps=args.local_steps,
                     batch_size=args.batch_size, seed=args.seed,
-                    use_pallas_stats=args.pallas_stats, verbose=True)
+                    use_pallas_stats=args.pallas_stats,
+                    eval_buckets=args.eval_buckets, verbose=True)
     up = res.comm["stat_upload_bytes"]
     coll = res.comm["eq2_collective_bytes"]["total"]
     print(f"[fleet] {res.meta['n_clients']} clients on "

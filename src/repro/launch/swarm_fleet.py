@@ -71,7 +71,8 @@ class FleetProgram(NamedTuple):
 
 def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                 use_pallas_stats: bool = False, with_eval: bool = False,
-                donate: bool = False, spmd: str = "auto") -> FleetProgram:
+                with_loss: bool = False, donate: bool = False,
+                spmd: str = "auto") -> FleetProgram:
     """ONE setup path for the fleet round on a ``pod``-axis mesh —
     the dry-run lowering (:func:`lower_fleet_round`) and the end-to-end
     driver (``repro.launch.fleet_driver``) both build their program
@@ -95,6 +96,13 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
       each shard sees a plain per-client conv. Inner model sharding is
       not used on this path (CNN clients are single-device sized).
 
+    ``with_eval`` keeps the per-client val accuracies in-program over a
+    rectangular stacked val split; ``with_loss`` is the bucketed-eval
+    driver surface (``engine.make_fleet_round(with_loss=True)``): the
+    round program carries no val stack — the driver evaluates with one
+    fixed-shape compiled program per size bucket — and returns the
+    replicated last-step loss alongside the stats.
+
     The coordinator inputs (``clusters``, ``weights``) ride the client
     axis and the stat upload comes back sharded over ``pod``.
     ``donate=True`` donates the params/opt buffers (the driver's round
@@ -111,17 +119,24 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
     # the client axis like everything else in the round
     ssh = jax.sharding.NamedSharding(mesh, P("pod"))
 
+    if with_eval and with_loss:
+        raise ValueError("with_eval and with_loss are exclusive round "
+                         "surfaces")
     if spmd == "shard_map":
         from jax.experimental.shard_map import shard_map
         local_step = make_fleet_round(model, opt, k, n_local_steps,
                                       use_pallas=use_pallas_stats,
                                       with_eval=with_eval,
+                                      with_loss=with_loss,
                                       axis_name="pod")
         pod = P("pod")
         if with_eval:
             in_specs = (pod, pod, pod, pod, P(), pod, pod)
             out_specs = (pod, pod, FleetRoundOut(stats=pod, val_acc=pod,
                                                  train_loss=P()))
+        elif with_loss:
+            in_specs = (pod, pod, pod, P(), pod, pod)
+            out_specs = (pod, pod, pod, P())
         else:
             in_specs = (pod, pod, pod, P(), pod, pod)
             out_specs = (pod, pod, pod)
@@ -151,11 +166,15 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
         bsh = jax.sharding.NamedSharding(mesh, P("pod", "data"))
         round_step = make_fleet_round(model, opt, k, n_local_steps,
                                       use_pallas=use_pallas_stats,
-                                      with_eval=with_eval)
+                                      with_eval=with_eval,
+                                      with_loss=with_loss)
         if with_eval:
             in_sh = (psh, osh, bsh, ssh, None, rep, rep)
             out_sh = (psh, osh, FleetRoundOut(stats=ssh, val_acc=ssh,
                                               train_loss=rep))
+        elif with_loss:
+            in_sh = (psh, osh, bsh, None, rep, rep)
+            out_sh = (psh, osh, ssh, rep)
         else:
             in_sh = (psh, osh, bsh, None, rep, rep)
             out_sh = (psh, osh, ssh)

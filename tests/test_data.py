@@ -4,7 +4,8 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.data.dr import TABLE_I, make_dr_swarm_data, scale_table
+from repro.data.dr import (TABLE_I, bucket_clients, make_dr_swarm_data,
+                           scale_table)
 from repro.data.tokens import make_token_swarm_data, sample_tokens
 
 
@@ -82,6 +83,49 @@ def test_dr_images_class_separable():
     mean0 = X[y == 0].mean()
     mean4 = X[y == 4].mean()
     assert mean4 > mean0 + 0.01
+
+
+def test_bucket_clients_pow2_grouping():
+    """Power-of-two ceilings group clients; exact powers stay in their
+    own ceiling; the result partitions range(N) ascending per bucket."""
+    sizes = [3, 4, 5, 8, 9, 16]        # ceilings 4, 4, 8, 8, 16, 16
+    groups = bucket_clients(sizes, max_buckets=4)
+    assert [g.tolist() for g in groups] == [[0, 1], [2, 3], [4, 5]]
+
+
+def test_bucket_clients_merges_to_max_buckets():
+    """More distinct ceilings than max_buckets merge adjacent groups by
+    least added pad rows; the output stays a partition and is
+    deterministic."""
+    sizes = [1, 2, 4, 8, 16, 32, 64, 128]    # 8 distinct ceilings
+    groups = bucket_clients(sizes, max_buckets=3)
+    assert len(groups) == 3
+    assert sorted(i for g in groups for i in g.tolist()) == list(range(8))
+    again = bucket_clients(sizes, max_buckets=3)
+    for a, b in zip(groups, again):
+        np.testing.assert_array_equal(a, b)
+    # ceilings ascend bucket to bucket (the engine's layout contract)
+    maxima = [max(np.asarray(sizes)[g]) for g in groups]
+    assert maxima == sorted(maxima)
+
+
+def test_bucket_clients_quantile_and_edges():
+    """Quantile strategy splits by size order into equal-count groups;
+    degenerate inputs behave: single client, more buckets than
+    clients, and invalid arguments raise."""
+    groups = bucket_clients([50, 1, 30, 2, 40, 3], max_buckets=3,
+                            strategy="quantile")
+    assert len(groups) == 3
+    assert sorted(i for g in groups for i in g.tolist()) == list(range(6))
+    assert [g.tolist() for g in bucket_clients([7])] == [[0]]
+    assert len(bucket_clients([5, 6], max_buckets=10,
+                              strategy="quantile")) <= 2
+    with pytest.raises(ValueError):
+        bucket_clients([])
+    with pytest.raises(ValueError):
+        bucket_clients([1, 2], max_buckets=0)
+    with pytest.raises(ValueError):
+        bucket_clients([1, 2], strategy="nope")
 
 
 def test_token_clients_are_non_iid():

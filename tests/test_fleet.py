@@ -152,6 +152,29 @@ def test_fleet_round_donated_reuse_does_not_retrace(unit_model,
                 f"fleet round retraced at round {r}"
 
 
+def test_fleet_driver_bucketed_eval_parity(unit_model, unit_clients):
+    """Bucketed ragged eval on the driver: the round program carries no
+    rectangular val stack (with_loss surface), each size bucket gets
+    ONE fixed-shape compiled eval program, and every round's val
+    accuracies / coordinator decisions / losses match the in-program
+    rectangular eval exactly — at a compile budget of 1 + n_buckets
+    with zero per-round retraces."""
+    mesh = make_fleet_mesh(len(unit_clients))
+    kw = dict(rounds=2, local_steps=2, batch_size=8, seed=0)
+    res_r = run_fleet(unit_model, _opt(), mesh, unit_clients, **kw)
+    res_b = run_fleet(unit_model, _opt(), mesh, unit_clients,
+                      eval_buckets=3, **kw)
+    n_buckets = res_b.meta["eval_buckets"]
+    assert 2 <= n_buckets <= 3
+    assert res_b.n_compiles == 1 + n_buckets
+    assert res_r.meta["eval_buckets"] == 0 and res_r.n_compiles == 1
+    for lr_, lb in zip(res_r.history, res_b.history):
+        np.testing.assert_array_equal(lr_.val_acc, lb.val_acc)
+        np.testing.assert_array_equal(lr_.assignments, lb.assignments)
+        np.testing.assert_array_equal(lr_.stats, lb.stats)
+        assert lr_.train_loss == lb.train_loss
+
+
 def test_fleet_driver_matches_sim_engine_statistically(unit_model,
                                                        unit_clients):
     """Sim parity: the driver executes the engine's protocol sequence

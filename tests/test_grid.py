@@ -248,6 +248,85 @@ def test_local_steps_and_lr_override_semantics(dr_clients, dr_model):
     assert np.isfinite(float(m1.train_loss[0]))
 
 
+def test_grid_scheduled_matches_masked_path(dr_clients, dr_model):
+    """Satellite: heterogeneous local_steps ride the sorted scan
+    schedule — ONE compiled program, rows exit at their own budget.
+    Metrics are bitwise the masked path's; params are allclose (~1 ulp:
+    prefix segments batch the train step over g < G lanes and XLA's
+    conv reduction order is lane-width-dependent), with rows that never
+    leave the full-width segment bitwise."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    specs = [{"local_steps": 2}, {"local_steps": 1},
+             {"local_steps": 1, "k": 2}]
+    schedule = tuple(s["local_steps"] for s in specs)
+    grid = make_grid_config(cfg, N, specs)
+    keys = jax.random.split(jax.random.PRNGKey(11), len(specs))
+
+    def mk():
+        return make_grid_state(dr_model, cfg.opt, dr_clients, keys)
+
+    # one lowering == one device program for the scheduled grid
+    lowered = jax.jit(run_grid,
+                      static_argnames=("cfg", "rounds", "schedule")).lower(
+        mk(), data, cfg, grid, 1, schedule)
+    s_s, m_s = lowered.compile()(mk(), data, grid)
+    s_m, m_m = jit_run_grid(mk(), data, cfg, grid, 1)
+
+    np.testing.assert_array_equal(np.asarray(m_m.val_acc),
+                                  np.asarray(m_s.val_acc))
+    np.testing.assert_array_equal(np.asarray(m_m.train_loss),
+                                  np.asarray(m_s.train_loss))
+    np.testing.assert_array_equal(np.asarray(m_m.assignments),
+                                  np.asarray(m_s.assignments))
+    for x, y in zip(jax.tree.leaves(s_m.params), jax.tree.leaves(s_s.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+    # min-step rows only ever run in the full-width segment -> bitwise
+    for g in (1, 2):
+        _params_equal(jax.tree.map(lambda x: x[g], s_m.params),
+                      jax.tree.map(lambda x: x[g], s_s.params))
+
+    # compile-count stays 1: the module entry point compiles the
+    # (cfg, rounds, schedule) signature once, then cache-hits
+    n0 = jit_run_grid._cache_size()
+    s1, _ = jit_run_grid(mk(), data, cfg, grid, 1, schedule)
+    n1 = jit_run_grid._cache_size()
+    assert n1 <= n0 + 1
+    jit_run_grid(jax.tree.map(jnp.copy, s1), data, cfg, grid, 1, schedule)
+    assert jit_run_grid._cache_size() == n1, "scheduled run_grid retraced"
+
+
+def test_grid_table_derives_schedule_and_matches_serial(dr_clients,
+                                                        dr_model):
+    """run_grid_table auto-derives the schedule from a heterogeneous
+    local_steps axis; each row still tracks the serial run_grid_point
+    oracle (allclose — the scheduled path's contract)."""
+    swarm = _swarm()
+    key = jax.random.PRNGKey(23)
+    axes = dict(local_steps=(1, 2))
+    results, grid_run = run_grid_table(dr_model, dr_clients, swarm, OPT,
+                                       key, axes=axes, batch_size=8)
+    specs = grid_axes(**axes)
+    keys = sweep_keys(key, specs)
+    for g, spec in enumerate(specs):
+        acc, serial = run_grid_point(spec, dr_model, dr_clients, swarm,
+                                     OPT, keys[g], batch_size=8)
+        np.testing.assert_allclose(
+            np.asarray(grid_run.metrics.mean_val_acc[g]),
+            np.asarray(serial.metrics.mean_val_acc),
+            rtol=1e-5, atol=1e-6, err_msg=str(spec))
+        np.testing.assert_allclose(results[g]["acc"], acc,
+                                   rtol=1e-5, atol=1e-5)
+        for x, y in zip(jax.tree.leaves(serial.state.params),
+                        jax.tree.leaves(
+                            jax.tree.map(lambda v: v[g],
+                                         grid_run.state.params))):
+            np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=str(spec))
+
+
 def test_grid_point_validates_against_static_maxima(dr_model):
     """k and local_steps outside [1, static max] fail at build time."""
     cfg = _cfg(dr_model)
