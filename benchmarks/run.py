@@ -7,6 +7,8 @@
   bucket_bench     — ragged bucketed layout vs rectangular pad-to-max
   kernel_bench     — kernel-layer microbenchmarks
   roofline_report  — §Roofline table from the dry-run artifacts
+  serve_bench      — continuous-batching engine: throughput/latency vs
+                     bucket layout + the per-bucket program budget
 
 Each row prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only name] [--fast]
@@ -36,7 +38,7 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.quick:
-        from benchmarks import cluster_ablation, table2_methods
+        from benchmarks import cluster_ablation, serve_bench, table2_methods
         print("name,us_per_call,derived")
         table2_methods.run(data_scale=args.data_scale, rounds=2,
                            local_steps=2, image_size=16,
@@ -44,11 +46,13 @@ def main() -> None:
         cluster_ablation.grid_bench(data_scale=args.data_scale, rounds=2,
                                     local_steps=2, serial_reference=False,
                                     out_json=None)
+        serve_bench.run(n_requests=6, max_new=4, max_seq=32, slots=4,
+                        cnn_requests=6, cnn_buckets=(1, 4), out_json=None)
         return
 
     from benchmarks import (bucket_bench, cluster_ablation, comm_scaling,
-                            kernel_bench, roofline_report, table2_methods,
-                            table3_archs)
+                            kernel_bench, roofline_report, serve_bench,
+                            table2_methods, table3_archs)
 
     suites = {
         "comm_scaling": comm_scaling.main,
@@ -59,6 +63,7 @@ def main() -> None:
         "cluster_ablation": lambda: (cluster_ablation.grid_bench(),
                                      cluster_ablation.run()),
         "bucket_bench": bucket_bench.main,
+        "serve_bench": serve_bench.main,
     }
     if args.fast:
         scale = args.data_scale
@@ -72,18 +77,23 @@ def main() -> None:
             cluster_ablation.run(data_scale=scale, rounds=2, local_steps=4))
         suites["bucket_bench"] = lambda: bucket_bench.run(
             data_scale=scale, rounds=2, local_steps=4, out_json=None)
+        suites["serve_bench"] = lambda: serve_bench.run(
+            n_requests=8, max_new=4, max_seq=32, slots=4,
+            cnn_requests=8, out_json=None)
     if args.no_artifacts and not args.fast:
         # --fast is already write-free (its overrides above pass
         # bench_json/out_json=None); only the full suite's writers —
         # table2_methods.main (BENCH_sweep.json), the default grid_bench
-        # (BENCH_grid.json) and bucket_bench (BENCH_bucket.json) — need
-        # the artifact-free variant of the SAME measurement
+        # (BENCH_grid.json), bucket_bench (BENCH_bucket.json) and
+        # serve_bench (BENCH_serve.json) — need the artifact-free
+        # variant of the SAME measurement
         suites["table2_methods"] = lambda: table2_methods.run(
             paper_budget_oracle=True)
         suites["cluster_ablation"] = lambda: (
             cluster_ablation.grid_bench(out_json=None),
             cluster_ablation.run())
         suites["bucket_bench"] = lambda: bucket_bench.run(out_json=None)
+        suites["serve_bench"] = lambda: serve_bench.run(out_json=None)
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():

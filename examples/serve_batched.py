@@ -1,5 +1,7 @@
 """Batched serving demo: prefill + autoregressive decode with the
 KV/SSM cache for any assigned architecture (reduced variant on CPU).
+Attention-backed LMs route through the ``repro.serve``
+continuous-batching engine; SSM/hybrid/encdec use the per-token loop.
 
     PYTHONPATH=src python examples/serve_batched.py --arch mamba2-370m
     PYTHONPATH=src python examples/serve_batched.py --arch granite-3-2b
@@ -10,18 +12,18 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch import serve as serve_mod
+from repro.launch.serve import run_serve
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
-    sys.argv = ["serve", "--arch", args.arch, "--batch", str(args.batch),
-                "--tokens", str(args.tokens)]
-    serve_mod.main()
+    run_serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+              tokens=args.tokens, verbose=True)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,13 @@ online-softmax state in scratch. Positions beyond ``pos`` (and outside
 the sliding window) are masked per tile, so ring-buffer caches work
 unchanged.
 
+``pos`` may be a scalar (every row at the same position — the original
+lock-step decode) or a per-row ``(B,)`` vector — the continuous-batching
+serving path, where each cache slot sits at its own sequence position.
+Cache lengths that are not a multiple of ``block_k`` are zero-padded up
+to the next block boundary; the padded columns sit at ``cols > pos`` and
+are masked by the causal mask, so the result is unchanged.
+
 Grid: (B, H, n_k_blocks) — one q row per (batch, head), cache blocks
 innermost/sequential.
 """
@@ -23,6 +30,7 @@ NEG_INF = -1e30
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                    *, scale, window, block_k, n_k):
+    b = pl.program_id(0)
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -31,7 +39,7 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    pos = pos_ref[0]
+    pos = pos_ref[b]
     q = q_ref[0, 0].astype(jnp.float32)               # (1, d)
     k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
     v = v_ref[0, 0].astype(jnp.float32)
@@ -61,19 +69,26 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 @functools.partial(
     jax.jit, static_argnames=("window", "block_k", "interpret"))
 def flash_decode(q, k, v, pos, *, window=0, block_k=256, interpret=False):
-    """q: (B,H,1,D); k,v: (B,KV,S,D); pos: () int32. Returns (B,H,1,D)."""
+    """q: (B,H,1,D); k,v: (B,KV,S,D); pos: () or (B,) int32.
+    Returns (B,H,1,D)."""
     B, H, _, D = q.shape
     KV, S = k.shape[1], k.shape[2]
     G = H // KV
     block_k = min(block_k, S)
     if S % block_k:
-        raise ValueError(f"cache length {S} must divide block_k {block_k}")
+        # ragged cache length: pad the seq axis to the next block
+        # boundary. Pad columns have cols > pos (pos < S always) so the
+        # causal mask zeroes their probability — bitwise no-op.
+        pad = block_k - S % block_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        S = S + pad
     n_k = S // block_k
     grid = (B, H, n_k)
 
     kernel = functools.partial(_decode_kernel, scale=1.0 / (D ** 0.5),
                                window=window, block_k=block_k, n_k=n_k)
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
 
     return pl.pallas_call(
         kernel,

@@ -32,17 +32,19 @@ def ref_attention(q, k, v, *, causal=True, window=0, q_offset=0):
 
 
 def ref_decode_attention(q, k, v, pos, *, window=0):
-    """q: (B,H,1,D); k,v: (B,KV,S,D); pos: () — keys 0..pos valid."""
+    """q: (B,H,1,D); k,v: (B,KV,S,D); pos: () or (B,) — keys 0..pos
+    valid per row (vector pos = the continuous-batching layout)."""
     B, H, _, D = q.shape
     KV, S = k.shape[1], k.shape[2]
     G = H // KV
     qg = q.reshape(B, KV, G, D).astype(jnp.float32)
     s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) / jnp.sqrt(D)
-    cols = jnp.arange(S)
-    mask = cols <= pos
+    cols = jnp.arange(S)[None, :]
+    posb = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (B,))[:, None]
+    mask = cols <= posb                                  # (B, S)
     if window > 0:
-        mask = mask & (cols > pos - window)
-    s = jnp.where(mask[None, None, None], s, -1e30)
+        mask = mask & (cols > posb - window)
+    s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(B, H, 1, D).astype(q.dtype)

@@ -49,8 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import OptimizerConfig
-from repro.core.aggregation import singleton_assignments
+from repro.configs.base import OptimizerConfig, asdict
+from repro.checkpoint import save_checkpoint
+from repro.core.aggregation import cluster_fedavg, singleton_assignments
 from repro.core.bso import brain_storm
 from repro.core.engine import make_batch, make_client_eval, stack_eval_split
 from repro.core.kmeans import kmeans
@@ -159,12 +160,38 @@ def _sample_round_batch(model_cfg, clients_data, n_rows: int, seed: int,
     return make_batch(model_cfg, np.stack(Xs), np.stack(ys))
 
 
+def export_fleet_checkpoint(path, model, sparams, clusters, weights, *,
+                            round_idx: int, n_clusters: int,
+                            mean_val_acc: float = 0.0):
+    """Serialize the swarm state for ``repro.serve``.
+
+    Applies the round's pending Eq. 2 (the aggregation the NEXT round
+    would fold in) so the checkpoint holds each client's cluster
+    aggregate, then saves the client-stacked tree with a manifest
+    ``extra`` sufficient to rebuild the model serve-side with no
+    training code: the full ``ModelConfig`` asdict, client count,
+    |D_h| weights and the cluster decision.
+    """
+    agg = cluster_fedavg(sparams, jnp.asarray(clusters),
+                         jnp.asarray(weights, jnp.float32),
+                         k=len(np.asarray(clusters)))
+    save_checkpoint(path, agg, step=round_idx + 1, extra={
+        "model_config": asdict(model.cfg),
+        "n_clients": int(len(np.asarray(clusters))),
+        "client_weights": np.asarray(weights, np.float32).tolist(),
+        "assignments": np.asarray(clusters, np.int32).tolist(),
+        "n_clusters": int(n_clusters),
+        "mean_val_acc": float(mean_val_acc),
+    })
+
+
 def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
               local_steps: int = 4, batch_size: int = 8, lr: float = 2e-3,
               n_clusters: int = 3, p1: float = 0.9, p2: float = 0.8,
               kmeans_iters: int = 20, seed: int = 0,
               use_pallas_stats: bool = False, eval_batch: int = 64,
               eval_buckets: int = 0, bucket_strategy: str = "pow2",
+              ckpt_path=None, ckpt_every: int = 0,
               verbose: bool = False) -> FleetRunResult:
     """Drive ``rounds`` full BSO-SL rounds on ``mesh`` with exactly ONE
     compiled fleet-round executable.
@@ -300,12 +327,24 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                 applied_clusters=applied, events=list(events),
                 wall_s=t1 - t0, coord_s=t2 - t1)
             history.append(log)
+            if ckpt_path and ckpt_every and (r + 1) % ckpt_every == 0 \
+                    and r != rounds - 1:
+                export_fleet_checkpoint(
+                    f"{ckpt_path}_r{r + 1}", model, sparams, clusters,
+                    np.asarray(weights), round_idx=r, n_clusters=n_clusters,
+                    mean_val_acc=log.mean_val_acc)
             if verbose:
                 print(f"[fleet] round {r}: val_acc={log.mean_val_acc:.3f} "
                       f"loss={log.train_loss:.3f} "
                       f"clusters={np.bincount(clusters, minlength=n_clusters)}"
                       f" events={len(events)} wall={log.wall_s:.2f}s")
 
+    if ckpt_path and history:
+        # final export: fold in the pending Eq. 2 (see module docstring)
+        export_fleet_checkpoint(
+            ckpt_path, model, sparams, history[-1].assignments,
+            np.asarray(weights), round_idx=rounds - 1,
+            n_clusters=n_clusters, mean_val_acc=history[-1].mean_val_acc)
     meta = dict(n_clients=N, rounds=rounds, local_steps=local_steps,
                 batch_size=batch_size, lr=lr, n_clusters=n_clusters, p1=p1,
                 p2=p2, seed=seed, mesh_shape=dict(mesh.shape),
@@ -339,6 +378,11 @@ def main():
     ap.add_argument("--eval-buckets", type=int, default=0,
                     help="bucket the val eval into at most this many "
                          "size buckets (0 = rectangular in-program eval)")
+    ap.add_argument("--ckpt", default=None, metavar="PATH",
+                    help="export the final aggregated swarm params "
+                         "(npz + manifest) for repro.serve")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="also export every N rounds (PATH_r<N>)")
     args = ap.parse_args()
     if args.devices:
         force_host_device_count(args.devices)
@@ -349,7 +393,11 @@ def main():
                     local_steps=args.local_steps,
                     batch_size=args.batch_size, seed=args.seed,
                     use_pallas_stats=args.pallas_stats,
-                    eval_buckets=args.eval_buckets, verbose=True)
+                    eval_buckets=args.eval_buckets,
+                    ckpt_path=args.ckpt, ckpt_every=args.ckpt_every,
+                    verbose=True)
+    if args.ckpt:
+        print(f"[fleet] checkpoint -> {args.ckpt}.npz")
     up = res.comm["stat_upload_bytes"]
     coll = res.comm["eq2_collective_bytes"]["total"]
     print(f"[fleet] {res.meta['n_clients']} clients on "

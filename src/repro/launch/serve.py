@@ -1,5 +1,16 @@
-"""Batched serving driver: prefill a batch of prompts, then decode
-tokens autoregressively with the KV/SSM cache via serve_step.
+"""Batched serving driver (compat shim over ``repro.serve``).
+
+MIGRATION: production serving lives in ``repro.serve`` — the
+continuous-batching engine (slot scheduler, per-bucket compiled
+chunked-prefill + decode programs, ``flash_decode`` under
+``use_pallas``). This module remains as
+
+* :func:`prefill_into_cache` — the per-token teacher-forcing reference
+  that the chunked prefill is validated against (and the only prefill
+  for cache families without one: ssm / hybrid / encdec);
+* :func:`run_serve` — a one-call driver that routes attention-backed
+  LMs through the engine and everything else through the per-token
+  loop, so the old CLI keeps working for every ``--arch``.
 
 PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --tokens 32
 """
@@ -10,6 +21,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
@@ -18,7 +30,8 @@ from repro.train.steps import make_serve_step
 
 def prefill_into_cache(model, params, prompts, cache):
     """Teacher-force the prompt through decode steps (smoke-scale;
-    production prefill uses the chunked forward + cache writeback)."""
+    production prefill uses the chunked forward + cache writeback —
+    ``model.prefill`` via ``repro.serve``)."""
     B, P = prompts.shape
     step = jax.jit(make_serve_step(model))
     last = None
@@ -28,6 +41,60 @@ def prefill_into_cache(model, params, prompts, cache):
     return last, cache
 
 
+def run_serve(arch: str, *, batch: int = 4, prompt_len: int = 8,
+              tokens: int = 16, seed: int = 0, smoke: bool = True,
+              engine: str = "auto", verbose: bool = False):
+    """Generate ``tokens`` greedy tokens for ``batch`` random prompts.
+
+    ``engine="auto"`` uses the ``repro.serve`` continuous-batching
+    engine when the family has a chunked-prefill path and falls back
+    to the per-token loop otherwise; ``"loop"`` forces the fallback.
+    Returns ``(gen, info)`` — the (batch, tokens) int32 generations and
+    a stats dict (tok/s, path taken).
+    """
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    if verbose:
+        print(f"[serve] arch={cfg.arch_id} "
+              f"params={model.param_count(params):,}")
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size),
+        np.int32)
+
+    use_engine = engine == "engine" or (engine == "auto"
+                                        and model.prefill is not None)
+    t0 = time.time()
+    if use_engine:
+        from repro.serve import BucketSpec, generate
+        res = generate(model, params, list(prompts),
+                       max_new_tokens=tokens,
+                       buckets=(BucketSpec(batch, prompt_len + tokens + 1),))
+        gen = np.asarray([r.tokens for r in res], np.int32)
+    else:
+        max_seq = prompt_len + tokens + 1
+        cache = model.init_cache(batch, max_seq)
+        tok, cache = prefill_into_cache(model, params,
+                                        jnp.asarray(prompts), cache)
+        step = jax.jit(make_serve_step(model))
+        out = [tok]                      # prefill argmax = first token
+        for i in range(tokens - 1):
+            pos = jnp.asarray(prompt_len + i, jnp.int32)
+            tok, _, cache = step(params, out[-1][:, None], cache, pos)
+            out.append(tok)
+        gen = np.asarray(jnp.stack(out, axis=1), np.int32)
+    dt = time.time() - t0
+    info = {"path": "engine" if use_engine else "loop",
+            "tok_per_s": tokens * batch / max(dt, 1e-9), "wall_s": dt}
+    if verbose:
+        print(f"decoded {tokens} tokens x {batch} seqs in {dt:.2f}s "
+              f"({info['tok_per_s']:.1f} tok/s, {info['path']} path)")
+        print("sample:", gen[0].tolist())
+    return gen, info
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -35,32 +102,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=("auto", "engine", "loop"),
+                    default="auto")
     args = ap.parse_args()
-
-    cfg = get_config(args.arch).smoke()
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    print(f"[serve] arch={cfg.arch_id} params={model.param_count(params):,}")
-
-    max_seq = args.prompt_len + args.tokens + 1
-    cache = model.init_cache(args.batch, max_seq)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    tok, cache = prefill_into_cache(model, params, prompts, cache)
-
-    step = jax.jit(make_serve_step(model))
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.tokens):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        tok, _, cache = step(params, out[-1][:, None], cache, pos)
-        out.append(tok)
-    dt = time.time() - t0
-    gen = jnp.stack(out[1:], axis=1)
-    print(f"decoded {args.tokens} tokens x {args.batch} seqs "
-          f"in {dt:.2f}s ({args.tokens * args.batch / dt:.1f} tok/s)")
-    print("sample:", gen[0].tolist())
+    run_serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+              tokens=args.tokens, seed=args.seed, engine=args.engine,
+              verbose=True)
 
 
 if __name__ == "__main__":

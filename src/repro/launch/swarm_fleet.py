@@ -124,11 +124,22 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                          "surfaces")
     if spmd == "shard_map":
         from jax.experimental.shard_map import shard_map
-        local_step = make_fleet_round(model, opt, k, n_local_steps,
+        from repro.sharding import use_sharding
+        inner_step = make_fleet_round(model, opt, k, n_local_steps,
                                       use_pallas=use_pallas_stats,
                                       with_eval=with_eval,
                                       with_loss=with_loss,
                                       axis_name="pod")
+
+        def local_step(*args):
+            # every mesh axis is manual inside the shard_map body, so
+            # with_sharding_constraint is rejected there — disable the
+            # activation-sharding context for the traced body (matters
+            # for attention-family clients whose forward calls
+            # shard_act; conv clients never hit it)
+            with use_sharding(None):
+                return inner_step(*args)
+
         pod = P("pod")
         if with_eval:
             in_specs = (pod, pod, pod, pod, P(), pod, pod)

@@ -156,52 +156,116 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, d_model=None):
     }
 
 
+def _write_cache_rows(cache, new, write_pos):
+    """Per-row cache write: cache (B,Smax,KV,hd), new (B,1,KV,hd),
+    write_pos (B,) int32 — each batch row writes at its own position
+    (the continuous-batching layout where slots decode out of step)."""
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), (p, 0, 0))
+    return jax.vmap(one)(cache, new, write_pos)
+
+
 def attend_decode(p, x, cache, pos, cfg: ModelConfig, *,
                   sliding_window: int = 0, update_cache: bool = True):
     """One-token decode. x: (B, 1, d); cache k/v: (B, Smax, KV, hd);
-    pos: () int32 — current position (tokens 0..pos-1 are valid).
+    pos: () int32 — current position (tokens 0..pos-1 are valid) — or
+    (B,) int32, one position per row (the continuous-batching serving
+    layout: every cache slot sits at its own sequence position).
 
     Returns (out (B,1,d), new_cache). The full-cache masked read is the
-    baseline lowering; §Perf iterates on windowed reads.
+    baseline lowering; ``cfg.use_pallas`` routes the cache read through
+    the ``flash_decode`` Pallas kernel (same math, online softmax over
+    sequence tiles — parity pinned in tests/test_kernels.py and inside
+    full generations in tests/test_serve.py).
     """
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     Smax = cache["k"].shape[1]
     ring = bool(cfg.cache_ring and cfg.sliding_window and
                 cfg.sliding_window >= Smax)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
     q, k_new, v_new = _project_qkv(p, x, x, cfg)
-    posb = jnp.full((B, 1), pos, jnp.int32)
+    posb = pos[:, None] if per_row else jnp.full((B, 1), pos, jnp.int32)
     q = apply_rope(q, posb, cfg.rope_theta)
     k_new = apply_rope(k_new, posb, cfg.rope_theta)
 
     if update_cache:
         write_pos = (pos % Smax) if ring else pos
-        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                         (0, write_pos, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                         (0, write_pos, 0, 0))
+        if per_row:
+            k = _write_cache_rows(cache["k"], k_new, write_pos)
+            v = _write_cache_rows(cache["v"], v_new, write_pos)
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, write_pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, write_pos, 0, 0))
     else:
         k, v = cache["k"], cache["v"]
     k = shard_act(k, "batch", "cache_seq", "act_heads", None)
     v = shard_act(v, "batch", "cache_seq", "act_heads", None)
 
-    # quantized caches: upcast at the matmul (XLA fuses the convert)
+    if cfg.use_pallas:
+        # the decode hot path: stream the cache once through the Pallas
+        # flash-decode kernel (ring caches: the window mask is already
+        # structural — slots hold exactly the last Smax positions)
+        from repro.kernels import ops
+        o = ops.flash_decode(jnp.swapaxes(q, 1, 2).astype(x.dtype),
+                             jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+                             pos, window=0 if ring else sliding_window)
+        out = jnp.swapaxes(o, 1, 2)                      # (B,1,H,hd)
+    else:
+        # quantized caches: upcast at the matmul (XLA fuses the convert)
+        k_c = k.astype(x.dtype) if k.dtype != x.dtype else k
+        v_c = v.astype(x.dtype) if v.dtype != x.dtype else v
+        scores = _gqa_scores(q, k_c).astype(jnp.float32)  # (B,KV,G,1,Smax)
+        kpos = jnp.arange(Smax)[None, :]
+        # ring: slots hold exactly the last Smax positions; only warmup
+        # slots (never written) are masked — the window mask is structural
+        valid = kpos <= posb                              # (B, Smax)
+        if sliding_window > 0 and not ring:
+            valid = valid & (kpos > posb - sliding_window)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _gqa_out(probs, v_c, B, 1, H, hd)
+    out = out.reshape(B, 1, H * hd) @ p["wo"].astype(x.dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def attend_prefill(p, x, cache, pos0, cfg: ModelConfig, *,
+                   sliding_window: int = 0):
+    """Chunked-prefill attention: one forward over a prompt chunk with
+    KV-cache writeback — the program that replaces per-token prefill
+    loops. x: (B, C, d) holds positions ``pos0 .. pos0+C-1`` (lock-step
+    across the batch — the serve engine pads prompts to the bucket
+    ceiling); k/v for the chunk are written into the cache at ``pos0``
+    and q attends to the full cache under the causal (+ window) mask, so
+    earlier chunks' entries participate. Returns (out (B,C,d), cache).
+
+    Rows whose real prompt is shorter than the chunk get garbage tail
+    entries in the cache — harmless by construction: decode overwrites
+    position t before any query can attend to it (the serve engine
+    starts each row's decode at its own prompt length).
+    """
+    B, C, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Smax = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    positions = pos0 + jnp.arange(C)[None, :]            # (1, C)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, pos0, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, pos0, 0, 0))
     k_c = k.astype(x.dtype) if k.dtype != x.dtype else k
     v_c = v.astype(x.dtype) if v.dtype != x.dtype else v
-    scores = _gqa_scores(q, k_c).astype(jnp.float32)     # (B,KV,G,1,Smax)
-    kpos = jnp.arange(Smax)[None, None, None, None, :]
-    if ring:
-        # slots hold exactly the last Smax positions; only warmup slots
-        # (never written) are masked — the window mask is structural
-        valid = kpos <= pos
-    else:
-        valid = kpos <= pos
-        if sliding_window > 0:
-            valid = valid & (kpos > pos - sliding_window)
-    scores = jnp.where(valid, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = _gqa_out(probs, v_c, B, 1, H, hd)
-    out = out.reshape(B, 1, H * hd) @ p["wo"].astype(x.dtype)
+    kv_positions = jnp.arange(Smax)[None, :]
+    out = _attention_math(q, k_c, v_c, positions, kv_positions, True,
+                          sliding_window, B, C, H, hd)
+    out = out.reshape(B, C, H * hd) @ p["wo"].astype(x.dtype)
     if "bo" in p:
         out = out + p["bo"].astype(x.dtype)
     return out, {"k": k, "v": v}

@@ -56,6 +56,7 @@ class Model:
     loss: Callable[[Any, dict], tuple]               # (params, batch) -> (loss, metrics)
     init_cache: Optional[Callable] = None            # (batch, max_seq) -> cache
     decode_step: Optional[Callable] = None           # (params, tok, cache, pos) -> (logits, cache)
+    prefill: Optional[Callable] = None               # (params, toks, cache, pos0) -> (logits, cache)
 
     def param_count(self, params) -> int:
         return sum(x.size for x in jax.tree.leaves(params))
@@ -114,6 +115,11 @@ def build_model(cfg: ModelConfig) -> Model:
         _lm_loss(fwd),
         init_cache=lambda b, s: tf_lib.init_lm_cache(cfg, b, s),
         decode_step=lambda p, t, c, pos: tf_lib.lm_decode_step(p, t, c, pos, cfg),
+        # chunked prefill (one forward + cache writeback) — attention
+        # families only; the SSM recurrence cannot mask padded prompt
+        # tails after the fact (repro.serve gates on this)
+        prefill=(lambda p, t, c, pos0: tf_lib.lm_prefill(p, t, c, pos0, cfg))
+        if cfg.family in ("dense", "moe") else None,
     )
 
 

@@ -328,11 +328,79 @@ def lm_forward(params, batch, cfg: ModelConfig):
 
 
 def lm_decode_step(params, tokens, caches, pos, cfg: ModelConfig):
-    """tokens: (B,1) int32; pos: () int32. Returns (logits (B,1,V), caches)."""
+    """tokens: (B,1) int32; pos: () int32 — or (B,) int32 for per-row
+    positions (continuous batching; attention families only — the SSM
+    recurrence is position-free so it needs no change).
+    Returns (logits (B,1,V), caches)."""
     x = apply_embedding(params["embedding"], tokens, cfg)
     x = shard_act(x, "batch", "seq", "embed")
     x, new_caches = _decode_layers(params, x, caches, pos, cfg)
     return _readout(params, x, cfg), new_caches
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (serving): one forward + KV-cache writeback
+
+
+def _prefill_block(p, x, cache, pos0, cfg: ModelConfig, kind: str):
+    """One decoder block over a prompt chunk with cache writeback.
+    Attention-backed kinds only: an SSM state updated by padded prompt
+    tails cannot be masked after the fact, so ssm/hybrid serve through
+    the per-token path instead."""
+    if kind != "dense" and kind != "moe":
+        raise NotImplementedError(
+            f"chunked prefill supports attention blocks, got '{kind}'")
+    h = apply_norm(p["attn_norm"], x, cfg)
+    a, new_cache = attn_lib.attend_prefill(p["attn"], h, cache, pos0, cfg,
+                                           sliding_window=cfg.sliding_window)
+    x = x + a
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    if kind == "moe":
+        m, _ = apply_moe(p["moe"], h, cfg)
+    else:
+        m = apply_mlp(p["mlp"], h, cfg)
+    return x + m, new_cache
+
+
+def lm_prefill(params, tokens, caches, pos0, cfg: ModelConfig):
+    """Chunked prefill: tokens (B,C) at positions ``pos0..pos0+C-1``,
+    ONE forward through the stack writing each layer's K/V into the
+    cache. Returns (logits (B,C,V), caches) — the caller gathers the
+    logit row at each request's last real prompt token. Replaces the
+    per-token teacher-forcing loop (C decode dispatches -> 1 program).
+    """
+    kinds = layer_kinds(cfg)
+    x = apply_embedding(params["embedding"], tokens, cfg)
+    x = shard_act(x, "batch", "seq", "embed")
+
+    if "blocks" in params:
+        new_caches = []
+        for i, p in enumerate(params["blocks"]):
+            x, nc = _prefill_block(p, x, caches[i], pos0, cfg, kinds[i])
+            new_caches.append(nc)
+        return _readout(params, x, cfg), new_caches
+
+    lp = params["layers"]
+    prefix, period_kinds, n_periods = _scan_plan(cfg)
+    new_prefix = []
+    for i, p in enumerate(lp["prefix"]):
+        x, nc = _prefill_block(p, x, caches["prefix"][i], pos0, cfg,
+                               prefix[i])
+        new_prefix.append(nc)
+
+    def body(h, xs):
+        stacked, cache = xs
+        ncs = {}
+        for j, kind in enumerate(period_kinds):
+            h, nc = _prefill_block(stacked[f"period{j}"], h,
+                                   cache[f"period{j}"], pos0, cfg, kind)
+            ncs[f"period{j}"] = nc
+        return h, ncs
+
+    stacked_xs = {k: v for k, v in lp.items() if k.startswith("period")}
+    x, new_stacked = jax.lax.scan(body, x, (stacked_xs, caches["body"]))
+    return _readout(params, x, cfg), {"prefix": new_prefix,
+                                      "body": new_stacked}
 
 
 # ---------------------------------------------------------------------------

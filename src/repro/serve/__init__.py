@@ -1,0 +1,10 @@
+"""Serving subsystem: continuous-batching inference for swarm-trained
+models, ``flash_decode`` on the hot path (use_pallas), with the same
+static-shape/one-program-per-bucket discipline as the training engine.
+"""
+from repro.serve.api import (classify, generate, load_checkpoint,  # noqa: F401
+                             make_engine, reduce_clients)
+from repro.serve.engine import (ClassifyResult, ImageClassifier,  # noqa: F401
+                                ServeEngine, ServeResult)
+from repro.serve.scheduler import (BucketSpec, Request,  # noqa: F401
+                                   SlotScheduler, default_bucket_layout)

@@ -1,0 +1,130 @@
+"""Train-to-serve bridge: load a fleet-driver checkpoint and serve it.
+
+``repro.launch.fleet_driver --ckpt out/fleet`` exports the swarm's
+final aggregated client-stacked params plus a manifest whose ``extra``
+carries everything needed to rebuild the model *without the training
+code path*: the full ``ModelConfig`` asdict, the client count and the
+per-client sample weights. :func:`load_checkpoint` inverts that —
+rebuild the config, ``build_model`` (a functools.cache hit for equal
+frozen configs), restore against a ShapeDtypeStruct example tree (no
+init compute), and reduce the client axis to the single served model.
+
+Reduction policies (``client=``):
+
+* ``"mean"``  — Eq. 2 with one global cluster (|D_h|-weighted mean over
+  clients). After the driver's final in-checkpoint Eq. 2 every client
+  already holds its cluster aggregate, so this is the cross-cluster
+  global model.
+* ``"client:i"`` — serve client ``i``'s (cluster's) model verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.checkpoint import restore_into
+from repro.models import build_model
+from repro.models.model import Model
+from repro.serve.engine import ImageClassifier, ServeEngine, ServeResult
+from repro.serve.scheduler import BucketSpec, Request, default_bucket_layout
+
+
+def reduce_clients(sparams, weights, client: str = "mean"):
+    """Collapse the leading client axis to one served parameter tree."""
+    if client == "mean":
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / jnp.maximum(w.sum(), 1e-9)
+
+        def mean(x):
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+            return (x.astype(jnp.float32) * wb).sum(0).astype(x.dtype)
+
+        return jax.tree.map(mean, sparams)
+    if client.startswith("client:"):
+        i = int(client.split(":", 1)[1])
+        return jax.tree.map(lambda x: x[i], sparams)
+    raise ValueError(f"unknown reduction '{client}' "
+                     "(want 'mean' or 'client:<i>')")
+
+
+def load_checkpoint(path, *, client: str = "mean",
+                    use_pallas: Optional[bool] = None
+                    ) -> Tuple[Model, object]:
+    """Restore a fleet checkpoint into ``(model, params)`` ready to
+    serve. ``use_pallas`` overrides the trained config's kernel flag
+    (serve on TPU what was swarm-trained with the jnp path, or vice
+    versa — params are identical either way)."""
+    path = Path(path)
+    manifest = json.loads(path.with_suffix(".json").read_text())
+    extra = manifest.get("extra", {})
+    if "model_config" not in extra:
+        raise ValueError(
+            f"{path}: manifest has no 'model_config' — was this saved by "
+            "fleet_driver --ckpt?")
+    cfg = ModelConfig(**extra["model_config"])
+    if use_pallas is not None and use_pallas != cfg.use_pallas:
+        cfg = dataclasses.replace(cfg, use_pallas=use_pallas)
+    model = build_model(cfg)
+    n = int(extra.get("n_clients", 1))
+    # example tree via eval_shape: restore_into only reads .shape/.dtype
+    example = jax.eval_shape(
+        lambda: jax.vmap(model.init)(
+            jax.random.split(jax.random.PRNGKey(0), n)))
+    sparams, _step = restore_into(example, path)
+    weights = np.asarray(extra.get("client_weights", [1.0] * n), np.float32)
+    return model, reduce_clients(sparams, weights, client)
+
+
+# --------------------------------------------------------- one-call servers
+
+
+def make_engine(model: Model, params, *, max_seq: int = 0,
+                buckets: Optional[Sequence[BucketSpec]] = None,
+                slots: int = 8, n_buckets: int = 2,
+                prefill_chunk: int = 0) -> ServeEngine:
+    """Build a :class:`ServeEngine` with either an explicit bucket
+    layout or the default pow2 ladder up to ``max_seq``."""
+    if buckets is None:
+        if max_seq <= 0:
+            raise ValueError("need max_seq (or explicit buckets)")
+        buckets = default_bucket_layout(max_seq, slots=slots,
+                                        n_buckets=n_buckets)
+    return ServeEngine(model, params, buckets, prefill_chunk=prefill_chunk)
+
+
+def generate(model: Model, params, prompts: Sequence[np.ndarray],
+             max_new_tokens: int = 16, *, eos_id: int = -1,
+             max_seq: int = 0, buckets=None, slots: int = 8,
+             n_buckets: int = 2, prefill_chunk: int = 0,
+             return_engine: bool = False) -> List[ServeResult]:
+    """Batch-generate through the continuous-batching engine: submit
+    every prompt, drain, return per-request :class:`ServeResult`\\ s in
+    submission order. The one-call replacement for the old
+    ``launch.serve`` per-token loop."""
+    if max_seq <= 0 and buckets is None:
+        max_seq = max(len(p) + max_new_tokens for p in prompts)
+    eng = make_engine(model, params, max_seq=max_seq, buckets=buckets,
+                      slots=slots, n_buckets=n_buckets,
+                      prefill_chunk=prefill_chunk)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=np.asarray(p, np.int32),
+                           max_new_tokens=max_new_tokens, eos_id=eos_id))
+    eng.run_until_drained()
+    results = [eng.results[rid] for rid in range(len(prompts))]
+    return (results, eng) if return_engine else results
+
+
+def classify(model: Model, params, images: Sequence[np.ndarray],
+             batch_buckets: Sequence[int] = (1, 4, 8)):
+    """Batched image-classification scoring for the paper's CNN swarm
+    models — the DR-grading serve path."""
+    clf = ImageClassifier(model, params, batch_buckets)
+    reqs = [Request(rid=i, image=np.asarray(im)) for i, im in enumerate(images)]
+    return clf.classify(reqs)

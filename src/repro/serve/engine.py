@@ -1,0 +1,365 @@
+"""The continuous-batching inference engine.
+
+``ServeEngine`` turns a single parameter tree (e.g. a fleet-driver
+checkpoint reduced by ``repro.serve.api.load_checkpoint``) into a
+request-level server with the training engine's static-shape
+discipline:
+
+* a fixed pool of KV-cache slots, partitioned into size buckets
+  (``scheduler.BucketSpec``) — per bucket ONE compiled **prefill**
+  program (chunked forward + cache writeback, replacing the per-token
+  teacher-forcing loop) and ONE compiled **decode** program (per-slot
+  positions; ``cfg.use_pallas`` routes the cache read through the
+  ``flash_decode`` Pallas kernel);
+* requests are admitted into free slots mid-flight — a slot finishing
+  its generation frees up while its neighbours keep decoding (the
+  decode program always runs the full bucket batch; inactive rows
+  compute ignored garbage — the price of zero retraces);
+* every per-step device→host pull is one ``(batch,)`` token vector.
+
+``ImageClassifier`` is the stateless analogue for the paper's CNN
+classifiers: per-batch-bucket compiled scoring programs over padded
+image batches.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serve.scheduler import BucketSpec, Request, SlotScheduler
+
+SERVE_FAMILIES = ("dense", "moe")
+
+
+# ------------------------------------------------------------------ results
+
+
+@dataclass
+class ServeResult:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    bucket: str
+    t_submit: float
+    t_admit: float
+    t_first: float
+    t_done: float
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (queue wait + prefill)."""
+        return self.t_first - self.t_submit
+
+
+# ------------------------------------------------------------- cache merge
+
+
+def _merge_slots(old, new, admit):
+    """Per-slot cache select: admitted slots take the freshly prefilled
+    cache, running slots keep theirs. KV leaves are (B, S, KV, hd) —
+    batch-leading — or (n_periods, B, S, KV, hd) under scanned layers
+    (batch second)."""
+    def m(o, n):
+        ax = 0 if n.ndim <= 4 else 1
+        shape = [1] * n.ndim
+        shape[ax] = -1
+        return jnp.where(admit.reshape(shape), n, o)
+    return jax.tree.map(m, old, new)
+
+
+# ------------------------------------------------------------------ engine
+
+
+class _BucketState:
+    """Host-side mirror of one bucket's device pool."""
+
+    def __init__(self, model: Model, spec: BucketSpec):
+        self.spec = spec
+        self.cache = model.init_cache(spec.batch, spec.seq)
+        self.pos = np.zeros(spec.batch, np.int32)
+        self.last_tok = np.zeros(spec.batch, np.int32)
+        self.active = np.zeros(spec.batch, bool)
+        self.gen: List[List[int]] = [[] for _ in range(spec.batch)]
+        self.req: List[Optional[Request]] = [None] * spec.batch
+
+
+class ServeEngine:
+    """Continuous-batching LM server over a fixed slot pool.
+
+    Parameters
+    ----------
+    model, params : the served model (family ``dense``/``moe`` — the
+        families with a chunked-prefill path) and its single parameter
+        tree.
+    buckets : the ``BucketSpec`` pool layout
+        (``scheduler.default_bucket_layout`` if omitted and ``max_seq``
+        given).
+    prefill_chunk : split each bucket's prefill forward into chunks of
+        this many positions (0 = one chunk of the full bucket ceiling).
+        Chunks ride the SAME compiled program — the loop is unrolled at
+        trace time, so the per-bucket program budget is unchanged.
+    """
+
+    def __init__(self, model: Model, params, buckets: Sequence[BucketSpec],
+                 *, prefill_chunk: int = 0, clock=time.perf_counter):
+        cfg = model.cfg
+        if cfg.family not in SERVE_FAMILIES or model.prefill is None:
+            raise ValueError(
+                f"ServeEngine serves attention-backed LMs {SERVE_FAMILIES}; "
+                f"got family '{cfg.family}' (ssm/hybrid/encdec serve via "
+                "the per-token repro.launch.serve path)")
+        ring = bool(cfg.cache_ring and cfg.sliding_window)
+        if ring:
+            # ring caches clamp the slot axis to the window; prefill
+            # writes [0, prompt_ceiling) contiguously, so prompts must
+            # fit the ring (generation may still wrap past it)
+            buckets = tuple(
+                BucketSpec(b.batch, b.seq,
+                           prompt_ceiling=min(b.seq, cfg.sliding_window))
+                for b in buckets)
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.prefill_chunk = prefill_chunk
+        self.clock = clock
+        self.scheduler = SlotScheduler(buckets)
+        self.state = [_BucketState(model, b) for b in self.scheduler.buckets]
+        self.results: Dict[int, ServeResult] = {}
+        self._prefill_fns = [self._make_prefill(b)
+                             for b in self.scheduler.buckets]
+        self._decode_fns = [self._make_decode()
+                            for _ in self.scheduler.buckets]
+        self.n_prefill_calls = 0
+        self.n_decode_calls = 0
+
+    # -- compiled programs ----------------------------------------------
+
+    def _prefill_width(self, spec: BucketSpec) -> int:
+        return spec.prompt_ceiling
+
+    def _make_prefill(self, spec: BucketSpec):
+        P = self._prefill_width(spec)
+        C = self.prefill_chunk if (0 < self.prefill_chunk < P
+                                   and P % self.prefill_chunk == 0) else P
+        model = self.model
+
+        def fn(params, tokens, cache, admit, last_idx):
+            # chunked forward + cache writeback; the chunk loop unrolls
+            # at trace time into the ONE per-bucket prefill program
+            tok = jnp.zeros((spec.batch,), jnp.int32)
+            new_cache = cache
+            for ci in range(P // C):
+                logits, new_cache = model.prefill(
+                    params, tokens[:, ci * C:(ci + 1) * C], new_cache,
+                    jnp.int32(ci * C))
+                rel = last_idx - ci * C
+                in_chunk = (rel >= 0) & (rel < C)
+                safe = jnp.clip(rel, 0, C - 1)
+                row = jnp.take_along_axis(
+                    logits, safe[:, None, None], axis=1)[:, 0]   # (B, V)
+                tok = jnp.where(in_chunk,
+                                jnp.argmax(row, -1).astype(jnp.int32), tok)
+            return tok, _merge_slots(cache, new_cache, admit)
+
+        return jax.jit(fn)
+
+    def _make_decode(self):
+        model = self.model
+
+        def fn(params, tok, cache, pos):
+            logits, new_cache = model.decode_step(params, tok[:, None],
+                                                  cache, pos)
+            nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+            return nxt, new_cache
+
+        return jax.jit(fn)
+
+    # -- request flow ----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.t_submit = self.clock()
+        self.scheduler.submit(req)
+
+    def _finish(self, bi: int, slot: int) -> None:
+        bs = self.state[bi]
+        req = self.scheduler.release(bi, slot)
+        req.t_done = self.clock()
+        self.results[req.rid] = ServeResult(
+            rid=req.rid, tokens=list(bs.gen[slot]),
+            prompt_len=req.prompt_len, bucket=bs.spec.name,
+            t_submit=req.t_submit, t_admit=req.t_admit,
+            t_first=req.t_first, t_done=req.t_done)
+        bs.active[slot] = False
+        bs.req[slot] = None
+        bs.gen[slot] = []
+        bs.pos[slot] = 0
+        bs.last_tok[slot] = 0
+
+    def _append_token(self, bi: int, slot: int, tok: int) -> None:
+        bs = self.state[bi]
+        req = bs.req[slot]
+        bs.gen[slot].append(int(tok))
+        bs.last_tok[slot] = tok
+        done = len(bs.gen[slot]) >= req.max_new_tokens or \
+            (req.eos_id >= 0 and int(tok) == req.eos_id)
+        if done:
+            self._finish(bi, slot)
+
+    def step(self) -> None:
+        """One engine tick: admit queued requests (per-bucket prefill),
+        then one decode step for every bucket with active slots."""
+        admissions = self.scheduler.admit()
+        for bi, lst in admissions.items():
+            bs = self.state[bi]
+            P = self._prefill_width(bs.spec)
+            toks = np.zeros((bs.spec.batch, P), np.int32)
+            admit = np.zeros(bs.spec.batch, bool)
+            last_idx = np.zeros(bs.spec.batch, np.int32)
+            for slot, req in lst:
+                plen = req.prompt_len
+                toks[slot, :plen] = req.prompt
+                admit[slot] = True
+                last_idx[slot] = plen - 1
+                bs.req[slot] = req
+                bs.gen[slot] = []
+            tok, bs.cache = self._prefill_fns[bi](
+                self.params, jnp.asarray(toks), bs.cache,
+                jnp.asarray(admit), jnp.asarray(last_idx))
+            self.n_prefill_calls += 1
+            tok = np.asarray(tok)
+            now = self.clock()
+            for slot, req in lst:
+                req.t_admit = now
+                req.t_first = now
+                bs.active[slot] = True
+                bs.pos[slot] = req.prompt_len
+                self._append_token(bi, slot, tok[slot])
+
+        for bi, bs in enumerate(self.state):
+            if not bs.active.any():
+                continue
+            nxt, bs.cache = self._decode_fns[bi](
+                self.params, jnp.asarray(bs.last_tok), bs.cache,
+                jnp.asarray(bs.pos))
+            self.n_decode_calls += 1
+            nxt = np.asarray(nxt)
+            for slot in np.flatnonzero(bs.active.copy()):
+                bs.pos[slot] += 1
+                self._append_token(bi, int(slot), nxt[slot])
+
+    def run_until_drained(self, max_ticks: int = 1_000_000) -> None:
+        for _ in range(max_ticks):
+            if self.scheduler.idle:
+                return
+            self.step()
+        raise RuntimeError(f"not drained after {max_ticks} ticks")
+
+    # -- invariants ------------------------------------------------------
+
+    def compile_counts(self) -> Dict[str, Dict[str, int]]:
+        """Per-bucket compiled-program census — the zero-retrace
+        acceptance property: steady state is exactly 1 prefill + 1
+        decode executable per bucket."""
+        return {b.name: {"prefill": self._prefill_fns[i]._cache_size(),
+                         "decode": self._decode_fns[i]._cache_size()}
+                for i, b in enumerate(self.scheduler.buckets)}
+
+
+# -------------------------------------------------------- CNN scoring path
+
+
+@dataclass
+class ClassifyResult:
+    rid: int
+    label: int
+    confidence: float
+    bucket: str
+    t_submit: float
+    t_done: float
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class ImageClassifier:
+    """Batched image-classification scoring for the paper's CNN
+    clients: requests drain through per-batch-bucket compiled scoring
+    programs (pad to the bucket, forward, argmax + softmax confidence).
+    The same static-shape discipline: one program per batch bucket."""
+
+    def __init__(self, model: Model, params,
+                 batch_buckets: Sequence[int] = (1, 4, 8),
+                 *, clock=time.perf_counter):
+        if model.cfg.family != "cnn":
+            raise ValueError(f"ImageClassifier needs a cnn family model, "
+                             f"got '{model.cfg.family}'")
+        self.model = model
+        self.params = params
+        self.buckets = tuple(sorted(set(int(b) for b in batch_buckets)))
+        self.clock = clock
+        self.results: Dict[int, ClassifyResult] = {}
+        self._fns = {b: self._make_score(b) for b in self.buckets}
+
+    def _make_score(self, batch: int):
+        model = self.model
+
+        def fn(params, images):
+            logits, _ = model.forward(params, {"images": images})
+            probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+            return (jnp.argmax(logits, -1).astype(jnp.int32),
+                    jnp.max(probs, -1))
+
+        return jax.jit(fn)
+
+    def _pick_bucket(self, n: int) -> int:
+        fits = [b for b in self.buckets if b <= n]
+        return max(fits) if fits else self.buckets[0] if n else 0
+
+    def classify(self, requests: Sequence[Request]) -> List[ClassifyResult]:
+        """Drain a queue of image requests in bucket-sized groups
+        (largest bucket that the remaining queue fills; the tail pads
+        the smallest bucket)."""
+        queue = list(requests)
+        now = self.clock()
+        for r in queue:
+            r.t_submit = now
+        out: List[ClassifyResult] = []
+        i = 0
+        while i < len(queue):
+            remaining = len(queue) - i
+            b = self._pick_bucket(remaining)
+            if b == 0:
+                break
+            group = queue[i:i + min(b, remaining)]
+            imgs = np.stack([r.image for r in group])
+            if len(group) < b:                    # pad the tail group
+                pad = np.zeros((b - len(group),) + imgs.shape[1:],
+                               imgs.dtype)
+                imgs = np.concatenate([imgs, pad])
+            label, conf = self._fns[b](self.params, jnp.asarray(imgs))
+            label, conf = np.asarray(label), np.asarray(conf)
+            t_done = self.clock()
+            for j, r in enumerate(group):
+                r.t_done = t_done
+                res = ClassifyResult(rid=r.rid, label=int(label[j]),
+                                     confidence=float(conf[j]),
+                                     bucket=f"b{b}", t_submit=r.t_submit,
+                                     t_done=t_done)
+                self.results[r.rid] = res
+                out.append(res)
+            i += len(group)
+        return out
+
+    def compile_counts(self) -> Dict[str, int]:
+        return {f"b{b}": fn._cache_size() for b, fn in self._fns.items()}

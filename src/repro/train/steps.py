@@ -63,9 +63,26 @@ def make_eval_step(model: Model):
 
 def make_serve_step(model: Model, *, sample: str = "greedy"):
     """One decode iteration: logits for the new token + updated cache +
-    the greedy next token. This is what decode_32k / long_500k lower."""
+    the greedy next token. This is what decode_32k / long_500k lower.
+    ``pos`` may be () for lock-step decode or (B,) for per-row positions
+    (the repro.serve continuous-batching engine)."""
     def serve_step(params, tokens, cache, pos):
         logits, new_cache = model.decode_step(params, tokens, cache, pos)
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return next_tok, logits, new_cache
     return serve_step
+
+
+def make_prefill_step(model: Model):
+    """Chunked prefill: one forward over a (B, C) prompt chunk with
+    KV-cache writeback (``model.prefill``). Returns the full (B, C, V)
+    logits + the updated cache; the serve engine gathers each request's
+    last-real-token row. Attention families only (``model.prefill`` is
+    None for ssm/hybrid/encdec — those serve via the per-token path)."""
+    if model.prefill is None:
+        raise ValueError(f"{model.cfg.arch_id} ({model.cfg.family}) has no "
+                         "chunked-prefill path")
+
+    def prefill_step(params, tokens, cache, pos0):
+        return model.prefill(params, tokens, cache, pos0)
+    return prefill_step

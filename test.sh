@@ -15,6 +15,9 @@
 # Stage 4 is the fleet smoke: 2 end-to-end driver rounds on the pod
 # mesh (stats -> host k-means/BSA -> next round's clusters) with
 # compile-count == 1 for the round step.
+# Stage 5 is the serve smoke: the continuous-batching engine drains a
+# mixed-length workload with exactly one prefill + one decode
+# executable per bucket.
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -23,4 +26,5 @@ python -m pytest -x -q tests/test_engine.py::test_engine_smoke
 python -m pytest -x -q tests/test_sweep.py::test_sweep_smoke_one_program
 python -m pytest -x -q tests/test_grid.py::test_grid_smoke_one_program
 python -m pytest -x -q tests/test_fleet.py::test_fleet_driver_smoke
+python -m pytest -x -q tests/test_serve.py::test_engine_smoke_program_budget
 exec python -m pytest -x -q "$@"

@@ -49,7 +49,39 @@ DECODE_CASES = [
     (1, 8, 2, 1024, 128, 1023, 0, 256),
     (2, 4, 4, 512, 64, 300, 128, 128),
     (1, 4, 1, 256, 64, 0, 0, 64),
+    # cache length NOT a multiple of block_k (serve buckets are free to
+    # pick any ceiling): the kernel zero-pads the tile axis
+    (2, 4, 2, 200, 64, 150, 0, 64),
+    (1, 4, 2, 80, 64, 79, 32, 64),
 ]
+
+
+@pytest.mark.parametrize("pos_list,S,win,bk", [
+    ([3, 100, 511], 512, 0, 128),       # per-row positions (serve slots)
+    ([0, 37], 96, 0, 64),               # S % block_k != 0
+    ([10, 250], 256, 64, 64),           # sliding window + vector pos
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_vector_pos(pos_list, S, win, bk, dtype):
+    """(B,) per-row positions — each cache slot decoding at its own
+    sequence point, the continuous-batching engine's hot path."""
+    B, H, KV, D = len(pos_list), 4, 2, 64
+    q, k, v = _qkv(B, H, KV, 1, S, D, dtype)
+    pos = jnp.asarray(pos_list, jnp.int32)
+    out = ops.flash_decode(q, k, v, pos, window=win, block_k=bk)
+    expect = ref.ref_decode_attention(q, k, v, pos, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+    # vector pos must agree row-for-row with scalar-pos calls
+    for b, p in enumerate(pos_list):
+        one = ops.flash_decode(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                               jnp.asarray(p, jnp.int32),
+                               window=win, block_k=bk)
+        np.testing.assert_allclose(np.asarray(out[b:b + 1], np.float32),
+                                   np.asarray(one, np.float32),
+                                   rtol=tol, atol=tol)
 
 
 @pytest.mark.parametrize("case", DECODE_CASES)

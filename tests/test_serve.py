@@ -1,0 +1,278 @@
+"""Serving subsystem tests (PR 7): scheduler invariants, the
+continuous-batching engine's per-bucket program budget, flash_decode
+parity inside full multi-token generations (ring-buffer and
+non-multiple-of-block_k cases included), and the train-to-serve bridge
+(fleet checkpoint -> repro.serve load -> generation / classification).
+
+Runs on whatever backend pytest sees (the Pallas paths take interpret
+mode on CPU).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (BucketSpec, ImageClassifier, Request, ServeEngine,
+                         SlotScheduler, default_bucket_layout)
+
+# ----------------------------------------------------------------- scheduler
+
+
+def _req(rid, plen, new=4):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                   max_new_tokens=new)
+
+
+def test_bucket_routing_smallest_fit():
+    s = SlotScheduler((BucketSpec(2, 16), BucketSpec(2, 64)))
+    assert s.bucket_for(_req(0, 4)) == 0          # 4+4 fits 16
+    assert s.bucket_for(_req(1, 13)) == 1         # 13+4 spills to 64
+    assert s.bucket_for(_req(2, 60, new=8)) is None
+    with pytest.raises(ValueError):
+        s.submit(_req(3, 100))
+
+
+def test_admission_fifo_per_bucket_no_cross_blocking():
+    s = SlotScheduler((BucketSpec(1, 16), BucketSpec(1, 64)))
+    for rid, plen in ((0, 4), (1, 4), (2, 30), (3, 4)):
+        s.submit(_req(rid, plen))
+    adm = s.admit()
+    # bucket 0 takes rid 0 (FIFO); rid 2 is NOT blocked behind rid 1
+    assert [(r.rid) for _, r in adm[0]] == [0]
+    assert [(r.rid) for _, r in adm[1]] == [2]
+    assert [r.rid for r in s.queue] == [1, 3]
+    assert s.admit() == {}                        # both buckets full
+    s.release(0, adm[0][0][0])
+    adm2 = s.admit()
+    assert [r.rid for _, r in adm2[0]] == [1]     # queue order kept
+    assert s.occupancy()["b1xs16"] == 1.0
+
+
+def test_no_spill_to_larger_bucket():
+    s = SlotScheduler((BucketSpec(1, 16), BucketSpec(1, 64)))
+    s.submit(_req(0, 4))
+    s.submit(_req(1, 4))
+    s.admit()
+    # bucket 1 idle, but the small request must wait for bucket 0
+    assert s.occupancy()["b1xs64"] == 0.0
+    assert [r.rid for r in s.queue] == [1]
+
+
+def test_default_bucket_layout_pow2():
+    bs = default_bucket_layout(128, slots=8, n_buckets=2)
+    assert [(b.batch, b.seq) for b in bs] == [(4, 64), (4, 128)]
+
+
+# -------------------------------------------------------------------- engine
+
+
+@pytest.fixture(scope="module")
+def lm_model():
+    return build_model(get_config("granite-3-2b").smoke())
+
+
+@pytest.fixture(scope="module")
+def lm_params(lm_model):
+    return lm_model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=n) for n in lens]
+
+
+BUCKETS = (BucketSpec(batch=2, seq=16), BucketSpec(batch=2, seq=48))
+
+
+def test_engine_smoke_program_budget(lm_model, lm_params):
+    """More requests than slots -> continuous admission, every request
+    drains, and the steady-state compile census is exactly 1 prefill +
+    1 decode executable per bucket (the zero-retrace property)."""
+    prompts = _prompts(lm_model.cfg.vocab_size, (3, 7, 12, 25, 5, 18))
+    res, eng = serve.generate(lm_model, lm_params, prompts,
+                              max_new_tokens=6, buckets=BUCKETS,
+                              return_engine=True)
+    assert [len(r.tokens) for r in res] == [6] * 6
+    assert {r.bucket for r in res} == {"b2xs16", "b2xs48"}
+    assert eng.n_prefill_calls > 2        # > one admission wave per bucket
+    cc = eng.compile_counts()
+    assert cc == {"b2xs16": {"prefill": 1, "decode": 1},
+                  "b2xs48": {"prefill": 1, "decode": 1}}
+    assert all(r.t_done >= r.t_first >= r.t_submit > 0 for r in res)
+
+
+def test_engine_matches_per_token_reference(lm_model, lm_params):
+    """The bucketed engine (chunked prefill + per-row-pos decode over a
+    shared slot pool) reproduces the naive one-request-at-a-time
+    teacher-forced loop token for token."""
+    prompts = _prompts(lm_model.cfg.vocab_size, (3, 9, 14), seed=1)
+    res = serve.generate(lm_model, lm_params, prompts, max_new_tokens=5,
+                         buckets=BUCKETS)
+
+    def ref_generate(prompt, max_new, S):
+        cache = lm_model.init_cache(1, S)
+        tok = None
+        for t, p in enumerate(prompt):
+            logits, cache = lm_model.decode_step(
+                lm_params, jnp.asarray([[p]], jnp.int32), cache,
+                jnp.int32(t))
+            tok = int(jnp.argmax(logits[0, -1]))
+        out = [tok]
+        pos = len(prompt)
+        while len(out) < max_new:
+            logits, cache = lm_model.decode_step(
+                lm_params, jnp.asarray([[out[-1]]], jnp.int32), cache,
+                jnp.int32(pos))
+            out.append(int(jnp.argmax(logits[0, -1])))
+            pos += 1
+        return out
+
+    for r, p in zip(res, prompts):
+        S = 16 if len(p) + 5 <= 16 else 48
+        assert r.tokens == ref_generate(p, 5, S)
+
+
+def test_pallas_parity_full_generation(lm_model, lm_params):
+    """flash_decode on the engine's hot path vs the jnp path, inside a
+    full multi-token generation. Bucket ceilings 16/48 are NOT
+    multiples of the kernel's block_k — the tile-padding path is what
+    production bucket layouts hit."""
+    prompts = _prompts(lm_model.cfg.vocab_size, (3, 12, 25, 18), seed=2)
+    res = serve.generate(lm_model, lm_params, prompts, max_new_tokens=6,
+                         buckets=BUCKETS)
+    model_p = build_model(dataclasses.replace(lm_model.cfg, use_pallas=True))
+    res_p = serve.generate(model_p, lm_params, prompts, max_new_tokens=6,
+                           buckets=BUCKETS)
+    for a, b in zip(res, res_p):
+        assert a.tokens == b.tokens
+
+
+def test_pallas_parity_ring_buffer_generation(lm_model):
+    """Sliding-window ring-buffer cache: generation runs past the
+    window so the ring wraps; kernel and jnp paths must still agree."""
+    cfg = dataclasses.replace(lm_model.cfg, sliding_window=12,
+                              cache_ring=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab_size, (4, 9), seed=3)
+    kw = dict(max_new_tokens=10, buckets=(BucketSpec(2, 32),))
+    res = serve.generate(model, params, prompts, **kw)
+    model_p = build_model(dataclasses.replace(cfg, use_pallas=True))
+    res_p = serve.generate(model_p, params, prompts, **kw)
+    for a, b in zip(res, res_p):
+        assert len(a.tokens) == 10 and a.tokens == b.tokens
+
+
+def test_chunked_prefill_matches_single_chunk(lm_model, lm_params):
+    prompts = _prompts(lm_model.cfg.vocab_size, (3, 12, 25), seed=4)
+    res = serve.generate(lm_model, lm_params, prompts, max_new_tokens=4,
+                         buckets=BUCKETS)
+    res_c = serve.generate(lm_model, lm_params, prompts, max_new_tokens=4,
+                           buckets=BUCKETS, prefill_chunk=8)
+    for a, b in zip(res, res_c):
+        assert a.tokens == b.tokens
+
+
+def test_eos_early_stop(lm_model, lm_params):
+    prompts = _prompts(lm_model.cfg.vocab_size, (3, 7), seed=0)
+    res = serve.generate(lm_model, lm_params, prompts, max_new_tokens=6,
+                         buckets=BUCKETS)
+    eos = res[0].tokens[1]
+    res_e = serve.generate(lm_model, lm_params, prompts, max_new_tokens=6,
+                           eos_id=eos, buckets=BUCKETS)
+    # greedy decode is deterministic: output is the unconstrained stream
+    # truncated at (and including) the first eos occurrence
+    cut = res[0].tokens.index(eos) + 1
+    assert res_e[0].tokens == res[0].tokens[:cut]
+
+
+def test_engine_rejects_family_without_prefill():
+    model = build_model(get_config("mamba2-370m").smoke())
+    with pytest.raises(ValueError, match="chunked-prefill|ssm"):
+        ServeEngine(model, None, (BucketSpec(1, 16),))
+
+
+# -------------------------------------------------- train-to-serve bridge
+
+
+def test_fleet_ckpt_to_serve_cnn(tmp_path):
+    """run_fleet -> --ckpt export -> serve load -> batched scoring; the
+    served labels equal a direct forward on the reduced params."""
+    from repro.launch.fleet_driver import make_unit_fleet, run_fleet
+    model, opt, mesh, clients = make_unit_fleet(4, image_size=16,
+                                                data_scale=16)
+    p = os.fspath(tmp_path / "fleet")
+    res = run_fleet(model, opt, mesh, clients, rounds=1, local_steps=2,
+                    batch_size=4, n_clusters=2, ckpt_path=p)
+    assert os.path.exists(p + ".npz") and os.path.exists(p + ".json")
+
+    m2, params = serve.load_checkpoint(p)
+    assert m2.cfg == model.cfg            # manifest round-trips the config
+    assert m2 is model                    # build_model cache hit
+    imgs = [np.asarray(clients[0]["train"][0][i]) for i in range(5)]
+    out = serve.classify(m2, params, imgs, batch_buckets=(1, 4))
+    direct = np.argmax(np.asarray(
+        m2.forward(params, {"images": jnp.asarray(np.stack(imgs))})[0]), -1)
+    assert [o.label for o in out] == direct.tolist()
+
+    # per-client reduction serves one cluster's model verbatim
+    _, p0 = serve.load_checkpoint(p, client="client:0")
+    sp = np.asarray(jax.tree.leaves(res.params)[0])
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(p0)[0]).shape,
+                                  sp[0].shape)
+
+
+def test_fleet_ckpt_to_serve_lm_e2e(tmp_path):
+    """The ISSUE acceptance path: an LM swarm through run_fleet ->
+    checkpoint -> repro.serve load -> autoregressive generation, with
+    the use_pallas decode path matching the jnp ref path."""
+    from repro.data.tokens import make_token_swarm_data
+    from repro.launch.fleet_driver import run_fleet
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.configs.base import OptimizerConfig
+    from repro.optim.optimizers import make_optimizer
+
+    model = build_model(get_config("granite-3-2b").smoke())
+    clients = make_token_swarm_data(4, model.cfg.vocab_size, n_seqs=8,
+                                    seq_len=16)
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=1e-3))
+    p = os.fspath(tmp_path / "lm_fleet")
+    run_fleet(model, opt, make_fleet_mesh(4), clients, rounds=1,
+              local_steps=2, batch_size=4, n_clusters=2, eval_batch=2,
+              ckpt_path=p)
+
+    m_jnp, params = serve.load_checkpoint(p, use_pallas=False)
+    prompts = _prompts(m_jnp.cfg.vocab_size, (3, 8), seed=5)
+    kw = dict(max_new_tokens=5, buckets=(BucketSpec(2, 16),))
+    res = serve.generate(m_jnp, params, prompts, **kw)
+    assert all(len(r.tokens) == 5 for r in res)
+
+    m_pal, params_p = serve.load_checkpoint(p, use_pallas=True)
+    assert m_pal.cfg.use_pallas
+    res_p = serve.generate(m_pal, params_p, prompts, **kw)
+    for a, b in zip(res, res_p):
+        assert a.tokens == b.tokens
+
+
+# ------------------------------------------------------------ CNN classifier
+
+
+def test_image_classifier_padding_and_buckets():
+    model = build_model(get_config("squeezenet-dr"))
+    params = model.init(jax.random.PRNGKey(1))
+    clf = ImageClassifier(model, params, (1, 4))
+    rng = np.random.default_rng(0)
+    imgs = rng.normal(size=(6, 32, 32, 3)).astype(np.float32)
+    out = clf.classify([Request(rid=i, image=imgs[i]) for i in range(6)])
+    assert [o.bucket for o in out] == ["b4"] * 4 + ["b1"] * 2
+    assert clf.compile_counts() == {"b1": 1, "b4": 1}
+    direct = np.argmax(np.asarray(
+        model.forward(params, {"images": jnp.asarray(imgs)})[0]), -1)
+    assert [o.label for o in out] == direct.tolist()
+    assert all(0.0 < o.confidence <= 1.0 for o in out)
