@@ -4,6 +4,7 @@
   table3_archs     — paper Table III (model-agnostic CNN sweep)
   comm_scaling     — §I/§III.B scalability & communication claim
   cluster_ablation — beyond-paper k / p1 / p2 ablation
+  churn_bench      — dropout x stale-decay robustness sweep (one program)
   bucket_bench     — ragged bucketed layout vs rectangular pad-to-max
   kernel_bench     — kernel-layer microbenchmarks
   roofline_report  — §Roofline table from the dry-run artifacts
@@ -38,7 +39,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.quick:
-        from benchmarks import cluster_ablation, serve_bench, table2_methods
+        from benchmarks import (churn_bench, cluster_ablation, serve_bench,
+                                table2_methods)
         print("name,us_per_call,derived")
         table2_methods.run(data_scale=args.data_scale, rounds=2,
                            local_steps=2, image_size=16,
@@ -46,13 +48,16 @@ def main() -> None:
         cluster_ablation.grid_bench(data_scale=args.data_scale, rounds=2,
                                     local_steps=2, serial_reference=False,
                                     out_json=None)
+        churn_bench.run(data_scale=args.data_scale, rounds=2,
+                        local_steps=2, dropouts=(0.0, 0.4),
+                        stale_decays=(0.0, 0.5), out_json=None)
         serve_bench.run(n_requests=6, max_new=4, max_seq=32, slots=4,
                         cnn_requests=6, cnn_buckets=(1, 4), out_json=None)
         return
 
-    from benchmarks import (bucket_bench, cluster_ablation, comm_scaling,
-                            kernel_bench, roofline_report, serve_bench,
-                            table2_methods, table3_archs)
+    from benchmarks import (bucket_bench, churn_bench, cluster_ablation,
+                            comm_scaling, kernel_bench, roofline_report,
+                            serve_bench, table2_methods, table3_archs)
 
     suites = {
         "comm_scaling": comm_scaling.main,
@@ -62,6 +67,7 @@ def main() -> None:
         "table3_archs": table3_archs.main,
         "cluster_ablation": lambda: (cluster_ablation.grid_bench(),
                                      cluster_ablation.run()),
+        "churn_bench": churn_bench.main,
         "bucket_bench": bucket_bench.main,
         "serve_bench": serve_bench.main,
     }
@@ -75,6 +81,9 @@ def main() -> None:
             cluster_ablation.grid_bench(data_scale=scale, rounds=2,
                                         local_steps=4, out_json=None),
             cluster_ablation.run(data_scale=scale, rounds=2, local_steps=4))
+        suites["churn_bench"] = lambda: churn_bench.run(
+            data_scale=scale, rounds=2, local_steps=4,
+            dropouts=(0.0, 0.4), stale_decays=(0.0, 0.5), out_json=None)
         suites["bucket_bench"] = lambda: bucket_bench.run(
             data_scale=scale, rounds=2, local_steps=4, out_json=None)
         suites["serve_bench"] = lambda: serve_bench.run(
@@ -84,14 +93,15 @@ def main() -> None:
         # --fast is already write-free (its overrides above pass
         # bench_json/out_json=None); only the full suite's writers —
         # table2_methods.main (BENCH_sweep.json), the default grid_bench
-        # (BENCH_grid.json), bucket_bench (BENCH_bucket.json) and
-        # serve_bench (BENCH_serve.json) — need the artifact-free
-        # variant of the SAME measurement
+        # (BENCH_grid.json), churn_bench (BENCH_churn.json), bucket_bench
+        # (BENCH_bucket.json) and serve_bench (BENCH_serve.json) — need
+        # the artifact-free variant of the SAME measurement
         suites["table2_methods"] = lambda: table2_methods.run(
             paper_budget_oracle=True)
         suites["cluster_ablation"] = lambda: (
             cluster_ablation.grid_bench(out_json=None),
             cluster_ablation.run())
+        suites["churn_bench"] = lambda: churn_bench.run(out_json=None)
         suites["bucket_bench"] = lambda: bucket_bench.run(out_json=None)
         suites["serve_bench"] = lambda: serve_bench.run(out_json=None)
 

@@ -67,6 +67,56 @@ def cluster_fedavg(stacked_params, assignments, n_samples, k: int):
     return jax.tree.map(agg_leaf, stacked_params)
 
 
+def cluster_fedavg_masked(stacked_params, assignments, weights, present,
+                          k: int):
+    """Churn-aware Eq. 2: participation-masked cluster FedAvg.
+
+    The same op sequence as :func:`cluster_fedavg` — per-cluster weight
+    normalisation, weighted segment-sum, gather back — with two churn
+    semantics on top:
+
+    * ``weights`` are the *effective* Eq. 2 weights, not raw |D_h|:
+      the caller has already folded participation in (0 for a
+      hard-masked absent client, |D_h|·λ^staleness for the
+      staleness-weighted option), so an absent client contributes
+      nothing (or a decayed echo) to its cluster's aggregate.
+    * ``present`` gates who RECEIVES: absent clients keep their own
+      (stale) params instead of taking the cluster aggregate — they
+      were not part of this round's exchange.
+
+    A cluster whose total effective weight is zero (every member absent
+    under hard masking) produces no aggregate; any client reading from
+    it falls back to its own params — the explicit guard that keeps the
+    zero denominator from ever surfacing as NaNs. (K-means handles the
+    same situation upstream via its empty-cluster reseed when the stats
+    matrix is masked; this guard covers assignments arriving from
+    *outside* k-means, e.g. a stale coordinator decision.)
+
+    With ``present`` all-ones and ``weights = n_samples * 1.0`` this is
+    BITWISE :func:`cluster_fedavg`: multiplying a float by 1.0 is
+    exact, ``where(True, agg, own)`` is the identity, and positive
+    |D_h| keep every cluster total strictly positive —
+    ``tests/test_churn.py`` pins the equivalence.
+    """
+    assignments = jnp.asarray(assignments)
+    w = jnp.asarray(weights, jnp.float32)
+    present = jnp.asarray(present, bool)
+    cluster_tot = jax.ops.segment_sum(w, assignments, num_segments=k)
+    wn = w / jnp.maximum(cluster_tot[assignments], 1e-9)
+    # receive = participated AND the cluster actually aggregated
+    take = present & (cluster_tot[assignments] > 0.0)
+
+    def agg_leaf(leaf):
+        lf = leaf.astype(jnp.float32)
+        weighted = lf * wn.reshape((-1,) + (1,) * (lf.ndim - 1))
+        sums = jax.ops.segment_sum(weighted, assignments, num_segments=k)
+        agg = sums[assignments].astype(leaf.dtype)
+        m = take.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, agg, leaf)
+
+    return jax.tree.map(agg_leaf, stacked_params)
+
+
 def cluster_fedavg_psum(stacked_params, assignments, n_samples, k: int,
                         axis_name: str):
     """Eq. 2 for a *local slice* of the client axis inside shard_map —
@@ -95,6 +145,35 @@ def cluster_fedavg_psum(stacked_params, assignments, n_samples, k: int,
             jax.ops.segment_sum(weighted, assignments, num_segments=k),
             axis_name)
         return sums[assignments].astype(leaf.dtype)
+
+    return jax.tree.map(agg_leaf, stacked_params)
+
+
+def cluster_fedavg_psum_masked(stacked_params, assignments, weights,
+                               present, k: int, axis_name: str):
+    """:func:`cluster_fedavg_masked` for a *local slice* of the client
+    axis inside shard_map — the fleet driver's churn-regime aggregation.
+    ``assignments`` / ``weights`` / ``present`` are local slices with
+    global cluster ids; the segment sums ride one psum each, and the
+    zero-weight-cluster guard plus the present-only receive mask apply
+    shard-locally (every shard sees the same psum'd cluster totals)."""
+    assignments = jnp.asarray(assignments)
+    w = jnp.asarray(weights, jnp.float32)
+    present = jnp.asarray(present, bool)
+    cluster_tot = jax.lax.psum(
+        jax.ops.segment_sum(w, assignments, num_segments=k), axis_name)
+    wn = w / jnp.maximum(cluster_tot[assignments], 1e-9)
+    take = present & (cluster_tot[assignments] > 0.0)
+
+    def agg_leaf(leaf):
+        lf = leaf.astype(jnp.float32)
+        weighted = lf * wn.reshape((-1,) + (1,) * (lf.ndim - 1))
+        sums = jax.lax.psum(
+            jax.ops.segment_sum(weighted, assignments, num_segments=k),
+            axis_name)
+        agg = sums[assignments].astype(leaf.dtype)
+        m = take.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, agg, leaf)
 
     return jax.tree.map(agg_leaf, stacked_params)
 

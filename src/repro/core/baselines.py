@@ -209,7 +209,9 @@ def run_grid_table(model: Model, clients_data, swarm: SwarmConfig,
 
     Pass either ``axes`` (named axes, expanded row-major via
     :func:`~repro.core.engine.grid_axes`, e.g.
-    ``axes={"k": (1, 2, 3), "p1": (0.9, 1.0)}``) or an explicit
+    ``axes={"k": (1, 2, 3), "p1": (0.9, 1.0)}`` — the churn scenario
+    axes ``dropout`` / ``stale_decay`` / ``churn_mask`` ride the same
+    surface, so a dropout-robustness sweep is one call) or an explicit
     ``specs`` list of grid-point keyword dicts. The engine statics in
     ``cfg`` (``n_clusters``, ``local_steps``) are the grid's pads, so
     every axis value must stay within them; when ``cfg`` is built here,
@@ -258,10 +260,16 @@ def run_grid_table(model: Model, clients_data, swarm: SwarmConfig,
     grid = make_grid_config(cfg, len(clients_data), rows)
     # heterogeneous step budgets ride the sorted scan schedule (rows
     # exit the scan at their own budget instead of paying the static
-    # max as masked no-ops); uniform grids keep the plain masked path
+    # max as masked no-ops); uniform grids keep the plain masked path.
+    # Churn grids always keep the masked path — the schedule's prefix
+    # segments assume every row trains every client (run_grid raises
+    # on the combination)
+    has_churn = any(k in r for r in rows
+                    for k in ("dropout", "stale_decay", "churn_mask"))
     row_steps = tuple(int(r.get("local_steps", cfg.local_steps))
                       for r in rows)
-    schedule = row_steps if min(row_steps) < cfg.local_steps else None
+    schedule = (row_steps if min(row_steps) < cfg.local_steps
+                and not has_churn else None)
     states, ms = jit_run_grid(states, data, cfg, grid, swarm.rounds,
                               schedule)
     if test_stack is None:

@@ -58,6 +58,20 @@ ONE executable too, again sharing one device-resident
 single-point program, and a padded-k row is bitwise-equal to a native
 smaller-k run (``tests/test_grid.py``).
 
+And to **scenarios**: real fleets churn — clients drop, lag, and
+rejoin. :class:`ChurnParams` makes that a traced axis on the same one
+program: a per-round participation mask (seeded Bernoulli dropout or an
+explicit schedule) under which absent clients run masked no-op local
+steps, keep their stale params through Eq. 2 (the masked
+``cluster_fedavg_masked`` with an all-absent-cluster fallback), and
+drop out of the k-means stats matrix (masked points ride the existing
+empty-cluster reseed); a ``stale_decay`` knob turns hard masking into
+staleness-weighted aggregation (weight ``|D_h| * decay^staleness``,
+counters carried in :attr:`SwarmState.staleness`). ``dropout`` /
+``stale_decay`` / ``churn_mask`` are :class:`GridPoint` axes, so a
+dropout-robustness sweep is ONE executable; an all-ones mask is bitwise
+the churn-free engine (``tests/test_churn.py``).
+
 Contract summary (the stable public surface):
 
 * :class:`SwarmState` — the complete mutable swarm (params, opt state,
@@ -83,7 +97,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, SwarmConfig
-from repro.core.aggregation import (cluster_fedavg, cluster_fedavg_psum,
+from repro.core.aggregation import (cluster_fedavg, cluster_fedavg_masked,
+                                    cluster_fedavg_psum,
+                                    cluster_fedavg_psum_masked,
                                     singleton_assignments)
 from repro.core.bso import brain_storm_jax
 from repro.core.diststats import swarm_distribution_matrix
@@ -106,6 +122,11 @@ class SwarmState(NamedTuple):
     key: Any                         # PRNG key driving sampling + BSA
     round: Any                       # () int32 round counter
     n_samples: Any                   # (N,) float32 |D_h| (Eq. 2 weights)
+    staleness: Any = None            # (N,) int32 rounds since last
+    #                                  participation (0 = participated
+    #                                  this round) — the churn axis's
+    #                                  carried counter; None on states
+    #                                  predating the churn engine
 
 
 class SwarmData(NamedTuple):
@@ -185,6 +206,9 @@ class RoundMetrics(NamedTuple):
     centers: Any                     # (k,) int32 center client ids
     n_replaced: Any                  # () int32 BSA replacement events
     n_swapped: Any                   # () int32 BSA swap events
+    present: Any = None              # (N,) bool participation mask of
+    #                                  this round (all-ones when no
+    #                                  churn axis is threaded)
 
 
 class MethodParams(NamedTuple):
@@ -235,6 +259,65 @@ def make_sweep_config(n_clients: int,
     return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
 
+class ChurnParams(NamedTuple):
+    """Traced per-round churn knobs — the scenario axis as engine data.
+
+    Real fleets have clients that drop, lag and rejoin; this axis makes
+    "how robust is BSO-SL at 30% dropout?" traced data on the same one
+    compiled program, exactly the :class:`MethodParams` move:
+
+    * an ABSENT client skips the local phase (masked no-op — keys are
+      consumed unconditionally so every churn row shares one program),
+      keeps its stale params (it never receives the round's Eq. 2
+      aggregate), contributes zero — or a staleness-decayed echo — of
+      weight to its cluster's Eq. 2 sum, and is excluded from the
+      k-means stats matrix (see :mod:`repro.core.kmeans` masks; an
+      all-absent cluster rides the existing empty-cluster reseed).
+    * ``stale_decay`` = λ selects the aggregation semantics: the
+      effective Eq. 2 weight of client h is ``|D_h| * λ^staleness``
+      where ``staleness`` counts rounds since last participation
+      (carried in :attr:`SwarmState.staleness`, reset to 0 on
+      participation). λ=0 is the plain hard mask (``0^0 = 1`` keeps
+      every present client at full weight), λ→1 lets stale params
+      linger in the aggregate at decaying weight.
+
+    ``dropout = 0.0`` (with no explicit mask) draws an all-ones mask,
+    which is BITWISE the no-churn engine path — the parity anchor
+    ``tests/test_churn.py`` pins.
+    """
+    dropout: Any          # () float32 — per-round P(client absent);
+                          #   the Bernoulli draw rides a fold_in of the
+                          #   round's sampling key (stream-disjoint)
+    stale_decay: Any      # () float32 λ — Eq. 2 staleness weight decay
+                          #   (0 = hard mask, see above)
+    mask: Any = None      # optional explicit participation mask
+                          #   overriding the Bernoulli draw: (N,) for
+                          #   every round, or a (rounds, N) schedule
+                          #   (run_rounds scans one row per round)
+
+
+def churn_params(dropout: float = 0.0, stale_decay: float = 0.0,
+                 mask=None) -> ChurnParams:
+    """One :class:`ChurnParams` row. ``mask`` (optional) pins the
+    participation pattern explicitly — (N,) for a fixed mask, or a
+    (rounds, N) schedule consumed row-per-round by :func:`run_rounds`;
+    without it each round Bernoulli-drops clients at ``dropout``."""
+    d = float(dropout)
+    if not 0.0 <= d <= 1.0:
+        raise ValueError(f"dropout={d} outside [0, 1]")
+    g = float(stale_decay)
+    if not 0.0 <= g <= 1.0:
+        raise ValueError(f"stale_decay={g} outside [0, 1]")
+    if mask is not None:
+        mask = jnp.asarray(mask, bool)
+        if mask.ndim not in (1, 2):
+            raise ValueError("churn mask must be (N,) or (rounds, N), "
+                             f"got shape {mask.shape}")
+    return ChurnParams(dropout=jnp.asarray(d, jnp.float32),
+                       stale_decay=jnp.asarray(g, jnp.float32),
+                       mask=mask)
+
+
 class GridPoint(NamedTuple):
     """Traced per-row hyper-parameters — grid axes as engine data.
 
@@ -262,15 +345,22 @@ class GridPoint(NamedTuple):
     p2: Any               # () float32 center-swap threshold
     local_steps: Any      # () int32 applied local steps, 1..cfg.local_steps
     lr: Any               # () float32 local-phase learning rate
+    churn: Any = None     # ChurnParams scenario row, or None (no churn)
 
 
 def grid_point(cfg: "EngineConfig", n_clients: int, *, method: str = "bso-sl",
-               k=None, p1=None, p2=None, local_steps=None,
-               lr=None) -> GridPoint:
+               k=None, p1=None, p2=None, local_steps=None, lr=None,
+               dropout=None, stale_decay=None, churn_mask=None) -> GridPoint:
     """One :class:`GridPoint` from a spec; ``None`` knobs inherit the
     engine-config value (so the empty spec is exactly the paper point).
     ``k``/``local_steps`` are validated against the static maxima at
-    build time — the traced program only sees in-range values."""
+    build time — the traced program only sees in-range values.
+
+    ``dropout`` / ``stale_decay`` / ``churn_mask`` build a
+    :class:`ChurnParams` scenario row (any of them given opts the row
+    in; ``dropout=0.0`` is the bitwise no-churn anchor). Grid rows must
+    be uniformly churn or churn-free — :func:`make_grid_config` checks.
+    """
     k = cfg.n_clusters if k is None else int(k)
     if not 1 <= k <= cfg.n_clusters:
         raise ValueError(f"grid k={k} outside [1, {cfg.n_clusters}] — "
@@ -280,13 +370,20 @@ def grid_point(cfg: "EngineConfig", n_clients: int, *, method: str = "bso-sl",
         raise ValueError(f"grid local_steps={steps} outside "
                          f"[1, {cfg.local_steps}] — cfg.local_steps is "
                          f"the static step budget")
+    churn = None
+    if dropout is not None or stale_decay is not None \
+            or churn_mask is not None:
+        churn = churn_params(0.0 if dropout is None else dropout,
+                             0.0 if stale_decay is None else stale_decay,
+                             churn_mask)
     return GridPoint(
         method=method_params(method, n_clients),
         n_clusters=jnp.asarray(k, jnp.int32),
         p1=jnp.asarray(cfg.p1 if p1 is None else p1, jnp.float32),
         p2=jnp.asarray(cfg.p2 if p2 is None else p2, jnp.float32),
         local_steps=jnp.asarray(steps, jnp.int32),
-        lr=jnp.asarray(cfg.lr if lr is None else lr, jnp.float32))
+        lr=jnp.asarray(cfg.lr if lr is None else lr, jnp.float32),
+        churn=churn)
 
 
 def grid_axes(**axes) -> list:
@@ -296,8 +393,10 @@ def grid_axes(**axes) -> list:
         # -> [{'k': 1, 'p1': 0.9}, {'k': 1, 'p1': 1.0}, ...]
 
     Axis names are :func:`grid_point` keywords (``k``, ``p1``, ``p2``,
-    ``local_steps``, ``lr``, ``method``). Point order is row-major in
-    the given axis order — the row order of :func:`make_grid_config`.
+    ``local_steps``, ``lr``, ``method``, and the churn axes
+    ``dropout`` / ``stale_decay`` / ``churn_mask``). Point order is
+    row-major in the given axis order — the row order of
+    :func:`make_grid_config`.
     """
     names = list(axes)
     return [dict(zip(names, combo))
@@ -310,6 +409,12 @@ def make_grid_config(cfg: "EngineConfig", n_clients: int,
     grid that :func:`run_grid` vmaps over. ``specs`` is a list of
     :func:`grid_point` keyword dicts (see :func:`grid_axes`)."""
     rows = [grid_point(cfg, n_clients, **s) for s in specs]
+    has_churn = [r.churn is not None for r in rows]
+    if any(has_churn) and not all(has_churn):
+        raise ValueError(
+            "grid rows must be uniformly churn or churn-free (stacking "
+            "mixes pytree structures); give the always-on rows "
+            "dropout=0.0 — it is the bitwise no-churn anchor")
     return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
 
@@ -471,7 +576,8 @@ def make_swarm_state(model: Model, opt: Optimizer, clients_data,
     n_samples = jnp.asarray([c["n_train"] for c in clients_data],
                             jnp.float32)
     return SwarmState(params=params, opt_state=opt_state, key=round_key,
-                      round=jnp.zeros((), jnp.int32), n_samples=n_samples)
+                      round=jnp.zeros((), jnp.int32), n_samples=n_samples,
+                      staleness=jnp.zeros((len(clients_data),), jnp.int32))
 
 
 def make_sweep_state(model: Model, opt: Optimizer, clients_data,
@@ -626,7 +732,7 @@ def sample_round_batch(key, data, batch_size: int, pool=None):
 
 
 def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
-                unroll: int = 1, n_active=None):
+                unroll: int = 1, n_active=None, present=None):
     """The shared local-training body of both regimes: a scan of
     vmapped train steps over the client axis.
 
@@ -641,11 +747,27 @@ def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
     program) but steps ``>= n_active`` leave params/opt state
     untouched, so applying all steps is bitwise the plain path.
 
+    ``present`` (a traced (N,) participation mask, or None) is the
+    churn axis's local-phase gate: every client still computes every
+    step (fixed shapes, unconditional key consumption — all churn
+    schedules share one program) but absent clients' params/opt state
+    are where-selected back, a per-client masked no-op, and the step
+    loss averages over present clients only. All-ones is bitwise the
+    unmasked path (``where(True, ...)`` identity; the masked loss mean
+    reduces over the identical addends).
+
     ``unroll`` trades compile time for loop overhead: XLA's CPU backend
     executes ops inside a while body markedly slower than the same ops
     unrolled (~2x on convs), so CPU benchmarking wants
     ``unroll=len(xs)``; TPU and large models want the rolled default."""
     vstep = jax.vmap(step, in_axes=(0, 0, 0, None))
+    if present is not None:
+        present = jnp.asarray(present, bool)
+
+        def sel_client(new, old):
+            m = present.reshape(present.shape
+                                + (1,) * (new.ndim - present.ndim))
+            return jnp.where(m, new, old)
 
     def body(carry, ix):
         i, x = ix
@@ -657,7 +779,19 @@ def local_phase(step, params, opt_state, lr, xs, batch_for_step, *,
                               p2, p)
             o2 = jax.tree.map(lambda new, old: jnp.where(on, new, old),
                               o2, o)
-        return (p2, o2), jnp.mean(m["loss"])
+        if present is None:
+            loss = jnp.mean(m["loss"])
+        else:
+            p2 = jax.tree.map(sel_client, p2, p)
+            o2 = jax.tree.map(sel_client, o2, o)
+            pf = present.astype(jnp.float32)
+            # reciprocal-multiply, not divide: XLA strength-reduces
+            # jnp.mean's constant denominator to a reciprocal multiply,
+            # so the all-ones masked mean is only bitwise-equal to
+            # jnp.mean if it rounds through the same reciprocal
+            loss = (jnp.sum(m["loss"] * pf)
+                    * (1.0 / jnp.maximum(jnp.sum(pf), 1.0)))
+        return (p2, o2), loss
 
     n_steps = jax.tree.leaves(xs)[0].shape[0]
     (params, opt_state), losses = jax.lax.scan(
@@ -716,13 +850,23 @@ def eval_swarm(model: Model, params, data):
 
 def _coordinate_and_aggregate(params, opt_state, val, n_samples,
                               cfg: "EngineConfig", masks: MethodParams,
-                              grid, k_kmeans, k_bso):
+                              grid, k_kmeans, k_bso, present=None,
+                              eff_w=None):
     """The method/grid-axis coordinator + Eq. 2 tail of
     :func:`swarm_round`, factored out so the sorted-schedule grid path
     can vmap exactly the same ops over its rows: distribution stats →
     masked k-means → brain storm → traced-mask selection → N-segment
     ``cluster_fedavg``. Returns ``(params, opt_state, assignments,
-    centers, n_replaced, n_swapped)``."""
+    centers, n_replaced, n_swapped)``.
+
+    ``present`` / ``eff_w`` (both None, or both set) are the churn
+    axis: absent clients are masked out of the k-means stats matrix
+    (an all-absent cluster rides its empty reseed), their brain-storm
+    scores are the recomputed scores of their stale params (the
+    deterministic equivalent of a server-cached last report), and
+    Eq. 2 runs the masked variant — effective weights ``eff_w``
+    (zero or staleness-decayed for absent clients), aggregates
+    delivered to present clients only."""
     N = n_samples.shape[0]
     zero = jnp.zeros((), jnp.int32)
     # the method/grid axis: one program, per-row traced masks. The
@@ -737,7 +881,8 @@ def _coordinate_and_aggregate(params, opt_state, val, n_samples,
     p2 = cfg.p2 if grid is None else grid.p2
     feats = swarm_distribution_matrix(params, use_pallas=cfg.use_pallas)
     _, a0 = kmeans(k_kmeans, feats, k=k, iters=cfg.kmeans_iters,
-                   use_pallas=cfg.use_pallas, k_active=k_act)
+                   use_pallas=cfg.use_pallas, k_active=k_act,
+                   mask=present)
     bsa_a, bsa_c, n_rep, n_swap = brain_storm_jax(
         k_bso, a0, val, k, p1, p2)
     use = masks.use_coord
@@ -745,14 +890,33 @@ def _coordinate_and_aggregate(params, opt_state, val, n_samples,
     centers = jnp.where(use, bsa_c, -1)
     n_rep = jnp.where(use, n_rep, zero)
     n_swap = jnp.where(use, n_swap, zero)
-    params = cluster_fedavg(params, assignments, n_samples, k=N)
+    if present is None:
+        params = cluster_fedavg(params, assignments, n_samples, k=N)
+    else:
+        params = cluster_fedavg_masked(params, assignments, eff_w,
+                                       present, k=N)
     if cfg.reset_opt_each_round:
-        opt_state = jax.vmap(cfg.opt.init)(params)
+        new_opt = jax.vmap(cfg.opt.init)(params)
+        if present is None:
+            opt_state = new_opt
+        else:
+            def sel(new, old):
+                m = present.reshape(present.shape
+                                    + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+            opt_state = jax.tree.map(sel, new_opt, opt_state)
     return params, opt_state, assignments, centers, n_rep, n_swap
 
 
+#: fold_in tag deriving the churn Bernoulli key from the round's local
+#: sampling key — fold_in does not consume the split stream, so the
+#: no-churn key discipline (and with it bitwise parity) is untouched.
+_CHURN_KEY_TAG = 0x0C
+
+
 def swarm_round(state: SwarmState, data: SwarmData,
-                cfg: EngineConfig, method: MethodParams = None):
+                cfg: EngineConfig, method: MethodParams = None,
+                churn: ChurnParams = None):
     """One full BSO-SL round as a pure function — local steps, eval,
     distribution upload, k-means, brain storm, Eq. 2 aggregation.
 
@@ -773,7 +937,17 @@ def swarm_round(state: SwarmState, data: SwarmData,
       row maxima — see :class:`GridPoint`),
     * ``None`` — the static ``cfg.aggregation`` branches keep the
       leaner single-method programs (``none`` skips the coordinator
-      entirely)."""
+      entirely).
+
+    ``churn`` threads the scenario axis (:class:`ChurnParams`) through
+    any of those paths; a :class:`GridPoint` carrying a churn row is
+    picked up automatically. Absent clients run masked no-op local
+    steps, keep their stale params through Eq. 2, and are excluded
+    from the k-means stats; their staleness counters
+    (:attr:`SwarmState.staleness`) increment, and participation resets
+    them to 0. An all-ones mask (or ``dropout=0``) is bitwise the
+    churn-free round — the parity anchor ``tests/test_churn.py`` pins.
+    """
     model, opt = cfg.model, cfg.opt
     step = make_train_step(model, opt)
     next_key, k_local, k_kmeans, k_bso = jax.random.split(state.key, 4)
@@ -781,9 +955,38 @@ def swarm_round(state: SwarmState, data: SwarmData,
     grid = method if isinstance(method, GridPoint) else None
     masks = grid.method if grid is not None else method
     lr = cfg.lr if grid is None else grid.lr
+    if churn is None and grid is not None:
+        churn = grid.churn
+
+    # --- churn axis: this round's participation mask + staleness
+    N = data.train_n.shape[0]
+    present = eff_w = staleness = None
+    if churn is not None:
+        if state.staleness is None:
+            raise ValueError(
+                "the churn axis needs SwarmState.staleness — rebuild "
+                "the state with make_swarm_state (or _replace a zeros "
+                "(N,) int32 field onto a pre-churn state)")
+        if churn.mask is not None:
+            present = jnp.asarray(churn.mask, bool)
+            if present.ndim != 1:
+                raise ValueError(
+                    "swarm_round wants a per-round (N,) churn mask; "
+                    "run_rounds scans (rounds, N) schedules")
+        else:
+            u = jax.random.uniform(
+                jax.random.fold_in(k_local, _CHURN_KEY_TAG), (N,))
+            present = u >= churn.dropout
+        staleness = jnp.where(present, 0, state.staleness + 1)
+        # effective Eq. 2 weight |D_h| * decay^staleness: present
+        # clients multiply by decay^0 == 1.0 (bitwise |D_h|), hard
+        # masking (decay=0) zeroes every absent client (0^k == 0, k>0)
+        eff_w = state.n_samples * jnp.power(
+            churn.stale_decay, staleness.astype(jnp.float32))
 
     # --- local phase: cfg.local_steps of on-device-sampled SGD (grid
-    # rows apply only the first grid.local_steps of them)
+    # rows apply only the first grid.local_steps of them; absent
+    # churn-axis clients apply none)
     sample_keys = jax.random.split(k_local, cfg.local_steps)
     if masks is None:
         batch_for_step = lambda kt: sample_round_batch(
@@ -794,21 +997,24 @@ def swarm_round(state: SwarmState, data: SwarmData,
     params, opt_state, losses = local_phase(
         step, state.params, state.opt_state, lr, sample_keys,
         batch_for_step, unroll=cfg.local_unroll,
-        n_active=None if grid is None else grid.local_steps)
+        n_active=None if grid is None else grid.local_steps,
+        present=present)
     # the last *applied* step's loss (grid rows stop early)
     train_loss = losses[-1] if grid is None else losses[grid.local_steps - 1]
 
-    # --- eval: per-client val accuracy (shared within clusters, §III.C)
+    # --- eval: per-client val accuracy (shared within clusters, §III.C).
+    # Absent clients are scored on their stale params — eval is
+    # deterministic in (params, val split), so this IS the score the
+    # coordinator cached at their last participation.
     val = eval_swarm(model, params, data)
 
     # --- coordinator + aggregation
-    N = data.train_n.shape[0]
     zero = jnp.zeros((), jnp.int32)
     if masks is not None:
         (params, opt_state, assignments, centers, n_rep,
          n_swap) = _coordinate_and_aggregate(
             params, opt_state, val, state.n_samples, cfg, masks, grid,
-            k_kmeans, k_bso)
+            k_kmeans, k_bso, present=present, eff_w=eff_w)
     elif cfg.aggregation == "none":
         assignments = jnp.zeros((N,), jnp.int32)
         centers = jnp.zeros((0,), jnp.int32)
@@ -824,31 +1030,66 @@ def swarm_round(state: SwarmState, data: SwarmData,
             feats = swarm_distribution_matrix(params,
                                               use_pallas=cfg.use_pallas)
             _, a0 = kmeans(k_kmeans, feats, k=k, iters=cfg.kmeans_iters,
-                           use_pallas=cfg.use_pallas)
+                           use_pallas=cfg.use_pallas, mask=present)
             assignments, centers, n_rep, n_swap = brain_storm_jax(
                 k_bso, a0, val, k, cfg.p1, cfg.p2)
-        params = cluster_fedavg(params, assignments, state.n_samples, k=k)
+        if present is None:
+            params = cluster_fedavg(params, assignments, state.n_samples,
+                                    k=k)
+        else:
+            params = cluster_fedavg_masked(params, assignments, eff_w,
+                                           present, k=k)
         if cfg.reset_opt_each_round:
-            opt_state = jax.vmap(opt.init)(params)
+            new_opt = jax.vmap(opt.init)(params)
+            if present is None:
+                opt_state = new_opt
+            else:
+                def sel(new, old):
+                    m = present.reshape(present.shape
+                                        + (1,) * (new.ndim - 1))
+                    return jnp.where(m, new, old)
+                opt_state = jax.tree.map(sel, new_opt, opt_state)
 
     new_state = SwarmState(params=params, opt_state=opt_state, key=next_key,
-                           round=state.round + 1, n_samples=state.n_samples)
+                           round=state.round + 1, n_samples=state.n_samples,
+                           staleness=(staleness if churn is not None
+                                      else state.staleness))
     metrics = RoundMetrics(mean_val_acc=jnp.mean(val), val_acc=val,
                            train_loss=train_loss, assignments=assignments,
                            centers=centers, n_replaced=n_rep,
-                           n_swapped=n_swap)
+                           n_swapped=n_swap,
+                           present=(present if present is not None
+                                    else jnp.ones((N,), bool)))
     return new_state, metrics
 
 
 def run_rounds(state: SwarmState, data: SwarmData, cfg: EngineConfig,
-               rounds: int, method: MethodParams = None):
+               rounds: int, method: MethodParams = None,
+               churn: ChurnParams = None):
     """Scan :func:`swarm_round` over ``rounds``: the whole multi-round
     fit as ONE device program. Metrics gain a leading (rounds,) axis.
     ``method`` threads a :class:`MethodParams` (Table-II method axis)
     or :class:`GridPoint` (hyper-parameter grid row) through every
-    round."""
+    round; ``churn`` (or the grid row's own churn) threads the
+    scenario axis — a (rounds, N) explicit mask schedule is scanned
+    one row per round, everything else is closed over per round."""
+    if churn is None and isinstance(method, GridPoint):
+        churn = method.churn
+    if churn is not None and churn.mask is not None \
+            and churn.mask.ndim == 2:
+        if churn.mask.shape[0] != rounds:
+            raise ValueError(
+                f"churn mask schedule has {churn.mask.shape[0]} rows "
+                f"for rounds={rounds}")
+
+        def sched_body(s, mk):
+            return swarm_round(s, data, cfg, method,
+                               churn._replace(mask=mk))
+
+        return jax.lax.scan(sched_body, state, churn.mask, length=rounds)
+
     def body(s, _):
-        return swarm_round(s, data, cfg, method)
+        return swarm_round(s, data, cfg, method, churn)
 
     return jax.lax.scan(body, state, None, length=rounds)
 
@@ -895,6 +1136,12 @@ def run_grid(state: SwarmState, data: SwarmData, cfg: EngineConfig,
     (~1 ulp — see :func:`_run_grid_scheduled`).
     """
     if schedule is not None:
+        if grid.churn is not None:
+            raise ValueError(
+                "the sorted local-steps schedule does not support churn "
+                "rows (its prefix segments assume every row trains every "
+                "client); pass schedule=None — churn grids ride the "
+                "masked path")
         return _run_grid_scheduled(state, data, cfg, grid, rounds,
                                    tuple(schedule))
 
@@ -998,11 +1245,13 @@ def _run_grid_scheduled(state: SwarmState, data, cfg: EngineConfig,
         )(params, opt_state, val, st.n_samples, grid, k_kmeans, k_bso)
         new_state = SwarmState(params=params, opt_state=opt_state,
                                key=next_key, round=st.round + 1,
-                               n_samples=st.n_samples)
+                               n_samples=st.n_samples,
+                               staleness=st.staleness)
         metrics = RoundMetrics(
             mean_val_acc=jnp.mean(val, axis=1), val_acc=val,
             train_loss=train_loss, assignments=assignments,
-            centers=centers, n_replaced=n_rep, n_swapped=n_swap)
+            centers=centers, n_replaced=n_rep, n_swapped=n_swap,
+            present=jnp.ones(val.shape, bool))
         return new_state, metrics
 
     state, ms = jax.lax.scan(round_body, state, None, length=rounds)
@@ -1046,7 +1295,7 @@ class FleetRoundOut(NamedTuple):
 def make_fleet_round(model: Model, opt: Optimizer, k: int,
                      n_local_steps: int = 1, *, use_pallas: bool = False,
                      with_eval: bool = False, with_loss: bool = False,
-                     axis_name: str = None):
+                     axis_name: str = None, with_churn: bool = False):
     """Fleet round built from the same body as :func:`swarm_round`,
     reordered so a multi-round driver can close the coordinator loop
     with NO extra program: first Eq. 2 ``cluster_fedavg`` applies the
@@ -1097,12 +1346,31 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
     the driver runs vmapped-conv clients the XLA partitioner cannot
     auto-shard over ``pod``. ``axis_name=None`` keeps the plain stacked
     layout for GSPMD auto-partitioning (the LM dry-run path).
+
+    ``with_churn`` appends two (N,) bool operands to whichever surface
+    was selected — ``round_step(..., present, agg_present)``: the
+    fault-injection regime of the fleet driver. ``agg_present`` gates
+    the incoming Eq. 2 (who *receives* the previous round's decision —
+    the masked aggregation variants, with the driver's host-computed
+    staleness weights riding the existing ``weights`` operand) and
+    ``present`` masks this round's local phase (dropped pods run
+    masked no-op steps). All-ones masks reproduce the churn-free body
+    bitwise, so the driver uses one program for both regimes.
     """
     step = make_train_step(model, opt)
 
-    def body(sparams, sopt, batch, lr, clusters, weights):
+    def body(sparams, sopt, batch, lr, clusters, weights,
+             present=None, agg_present=None):
         # Eq. 2 on the incoming (previous-round) coordinator decision
-        if axis_name is None:
+        if agg_present is not None:
+            if axis_name is None:
+                sparams = cluster_fedavg_masked(sparams, clusters, weights,
+                                                agg_present, k=k)
+            else:
+                sparams = cluster_fedavg_psum_masked(
+                    sparams, clusters, weights, agg_present, k=k,
+                    axis_name=axis_name)
+        elif axis_name is None:
             sparams = cluster_fedavg(sparams, clusters, weights, k=k)
         else:
             sparams = cluster_fedavg_psum(sparams, clusters, weights, k=k,
@@ -1122,7 +1390,7 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
 
         sparams, sopt, losses = local_phase(step, sparams, sopt, lr,
                                             jnp.arange(n_local_steps),
-                                            batch_for_step)
+                                            batch_for_step, present=present)
         stats = swarm_distribution_matrix(sparams, use_pallas=use_pallas)
         return sparams, sopt, stats, losses
 
@@ -1130,9 +1398,13 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
         client_eval = make_client_eval(model)
 
         def round_step_eval(sparams, sopt, batch, val, lr, clusters,
-                            weights):
+                            weights, *churn_masks):
+            kw = {}
+            if with_churn:
+                present, agg_present = churn_masks
+                kw = {"present": present, "agg_present": agg_present}
             sparams, sopt, stats, losses = body(sparams, sopt, batch, lr,
-                                                clusters, weights)
+                                                clusters, weights, **kw)
             val_acc = client_eval(sparams, val)
             loss = losses[-1]
             if axis_name is not None:
@@ -1146,9 +1418,14 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
 
     if with_loss:
 
-        def round_step_loss(sparams, sopt, batch, lr, clusters, weights):
+        def round_step_loss(sparams, sopt, batch, lr, clusters, weights,
+                            *churn_masks):
+            kw = {}
+            if with_churn:
+                present, agg_present = churn_masks
+                kw = {"present": present, "agg_present": agg_present}
             sparams, sopt, stats, losses = body(sparams, sopt, batch, lr,
-                                                clusters, weights)
+                                                clusters, weights, **kw)
             loss = losses[-1]
             if axis_name is not None:
                 loss = jax.lax.pmean(loss, axis_name)
@@ -1156,9 +1433,14 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
 
         return round_step_loss
 
-    def round_step(sparams, sopt, batch, lr, clusters, weights):
+    def round_step(sparams, sopt, batch, lr, clusters, weights,
+                   *churn_masks):
+        kw = {}
+        if with_churn:
+            present, agg_present = churn_masks
+            kw = {"present": present, "agg_present": agg_present}
         sparams, sopt, stats, _ = body(sparams, sopt, batch, lr, clusters,
-                                       weights)
+                                       weights, **kw)
         return sparams, sopt, stats
 
     return round_step

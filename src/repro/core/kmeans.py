@@ -18,6 +18,14 @@ a ``k=k_max, k_active=j`` run reproduces a native ``k=j`` run exactly
 ``engine.run_grid`` vmap a cluster-count ablation into one program.
 ``k_active=None`` keeps the plain static-k path.
 
+**Masked points** (the churn engine's participation axis): every entry
+point also takes an optional traced ``mask`` over the N points — absent
+clients keep receiving assignments (cluster membership feeds the
+staleness-weighted Eq. 2) but contribute nothing to seeding or centroid
+means, and a cluster whose members are all absent is treated as empty
+and rides the far-point reseed (present candidates only). An all-ones
+mask is bitwise the unmasked run.
+
 The distance/assign step has two interchangeable implementations:
 the jnp path below (the oracle) and the ``kmeans_assign`` Pallas kernel
 (``use_pallas=True``) — one distance-matmul+argmin device program per
@@ -38,15 +46,35 @@ def _pairwise_sq_dists(X, C):
     return jnp.maximum(x2 + c2 - 2.0 * X @ C.T, 0.0)
 
 
-def kmeans_pp_init(key, X, k: int):
+def kmeans_pp_init(key, X, k: int, mask=None):
     """k-means++ seeding. Draws derive per-index from ``fold_in`` so
     seeds 0..j are identical for every static ``k >= j`` — the masked
-    path's pad-invariance. Deliberately unmasked: pad slots beyond a
-    caller's ``k_active`` still seed (fixed shapes, identical first
-    ``k_active`` draws) and are masked out of every downstream
-    assignment instead."""
+    path's pad-invariance. Deliberately unmasked over *clusters*: pad
+    slots beyond a caller's ``k_active`` still seed (fixed shapes,
+    identical first ``k_active`` draws) and are masked out of every
+    downstream assignment instead.
+
+    ``mask`` (a traced (N,) participation mask, or None) excludes
+    absent *points* from seeding: the first seed's uniform draw is
+    remapped onto the present subsequence and the ++ probabilities of
+    absent points are zeroed. With ``mask`` all-ones both moves are
+    bitwise identities (the remap fixes the same index, ``d * 1.0`` is
+    exact), so a fully-present masked run reproduces the unmasked run
+    exactly — the churn engine's parity anchor."""
     N = X.shape[0]
-    idx0 = jax.random.randint(jax.random.fold_in(key, 0), (), 0, N)
+    r0 = jax.random.randint(jax.random.fold_in(key, 0), (), 0, N)
+    if mask is None:
+        idx0 = r0
+        mask_f = None
+    else:
+        m = jnp.asarray(mask, bool)
+        mask_f = m.astype(X.dtype)
+        # uniform over the present subsequence: r0 mod n_present ranks
+        # into the cumulative-presence prefix (identity when all
+        # present: cumsum hits r0+1 first at index r0)
+        cum = jnp.cumsum(m.astype(jnp.int32))
+        rank = r0 % jnp.maximum(cum[-1], 1)
+        idx0 = jnp.clip(jnp.searchsorted(cum, rank + 1), 0, N - 1)
     C = jnp.zeros((k, X.shape[1]), X.dtype).at[0].set(X[idx0])
 
     def body(i, C):
@@ -55,6 +83,8 @@ def kmeans_pp_init(key, X, k: int):
         dists = _pairwise_sq_dists(X, C)
         dists = jnp.where(valid[None, :], dists, jnp.inf)
         d = jnp.min(dists, axis=1)
+        if mask_f is not None:
+            d = d * mask_f
         p = d / jnp.maximum(d.sum(), 1e-12)
         nxt = jax.random.choice(jax.random.fold_in(key, i), N, p=p)
         return C.at[i].set(X[nxt])
@@ -83,13 +113,26 @@ def _assign_fn(use_pallas: bool, k_active=None):
     return assign
 
 
-def lloyd_step(X, C, k: int, *, use_pallas: bool = False, k_active=None):
+def lloyd_step(X, C, k: int, *, use_pallas: bool = False, k_active=None,
+               mask=None):
     """One Lloyd iteration: assign, recompute means, reseed empties.
     Only clusters ``< k_active`` count as re-seedable empties — the
     inactive pad slots must stay out of the far-point budget or a
-    ``k_active=j`` run would burn its farthest points on dead slots."""
+    ``k_active=j`` run would burn its farthest points on dead slots.
+
+    ``mask`` (a traced (N,) participation mask, or None) is the churn
+    engine's point axis: absent points are still *assigned* (their
+    cluster membership feeds the staleness-weighted Eq. 2) but carry
+    zero weight in the centroid means, and a cluster whose members are
+    all absent counts as EMPTY — it rides the existing far-point reseed
+    (restricted to present candidates), which is exactly the
+    all-absent-cluster fallback the churn round relies on. All-ones
+    mask is bitwise the unmasked step (``onehot * 1.0`` and
+    ``where(True, d, -inf)`` are identities)."""
     a = _assign_fn(use_pallas, k_active)(X, C)
     onehot = jax.nn.one_hot(a, k, dtype=X.dtype)             # (N, K)
+    if mask is not None:
+        onehot = onehot * jnp.asarray(mask, X.dtype)[:, None]
     counts = onehot.sum(axis=0)                              # (K,)
     sums = onehot.T @ X                                      # (K, F)
     newC = sums / jnp.maximum(counts[:, None], 1.0)
@@ -101,6 +144,9 @@ def lloyd_step(X, C, k: int, *, use_pallas: bool = False, k_active=None):
     # is opaque to XLA's CSE).
     diff = X - C[a]
     d = jnp.sum(diff * diff, axis=1)
+    if mask is not None:
+        # absent points can never be reseed targets
+        d = jnp.where(jnp.asarray(mask, bool), d, -jnp.inf)
     far_order = jnp.argsort(-d)                              # (N,)
     empty = counts == 0
     if k_active is not None:
@@ -112,16 +158,21 @@ def lloyd_step(X, C, k: int, *, use_pallas: bool = False, k_active=None):
 
 
 def kmeans(key, X, k: int, iters: int = 20, *, use_pallas: bool = False,
-           k_active=None):
+           k_active=None, mask=None):
     """Returns (centroids (k,F), assignments (N,)).
 
     ``k`` is static (shapes); ``k_active`` optionally restricts the
     run to the first ``k_active`` clusters as traced data — assignments
     land in ``[0, k_active)`` and match a native ``k=k_active`` run
-    bitwise (centroid rows ``>= k_active`` are dead pad)."""
-    C0 = kmeans_pp_init(key, X, k)
+    bitwise (centroid rows ``>= k_active`` are dead pad).
+
+    ``mask`` (a traced (N,) participation mask, or None) excludes
+    absent points from seeding, centroid means and reseeds while still
+    assigning every point a cluster (see :func:`lloyd_step`); all-ones
+    is bitwise the unmasked run."""
+    C0 = kmeans_pp_init(key, X, k, mask=mask)
     C = jax.lax.fori_loop(
         0, iters,
         lambda it, C: lloyd_step(X, C, k, use_pallas=use_pallas,
-                                 k_active=k_active), C0)
+                                 k_active=k_active, mask=mask), C0)
     return C, _assign_fn(use_pallas, k_active)(X, C)

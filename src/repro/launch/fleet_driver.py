@@ -41,8 +41,9 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, List
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +52,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig, asdict
 from repro.checkpoint import save_checkpoint
-from repro.core.aggregation import cluster_fedavg, singleton_assignments
+from repro.core.aggregation import (cluster_fedavg, cluster_fedavg_masked,
+                                    singleton_assignments)
 from repro.core.bso import brain_storm
 from repro.core.engine import make_batch, make_client_eval, stack_eval_split
 from repro.core.kmeans import kmeans
@@ -95,6 +97,69 @@ def host_coordinator(stats, val_acc, *, k: int, p1: float, p2: float,
             plan.centers.astype(np.int32), plan.events)
 
 
+# -------------------------------------------------------- fault injection
+
+
+# fault draws get their own host RNG stream: a 4-element seed can never
+# collide with the coordinator's [seed, round] or the batch sampler's
+# [seed, round, client] streams
+_FAULT_STREAM_TAG = (0xFA, 0x17)
+
+
+@dataclass(frozen=True)
+class FleetFaults:
+    """Host-side fault-injection regime for :func:`run_fleet`.
+
+    ``drop_rate``      — per-round Bernoulli probability that a client
+                         drops: no local phase (masked no-op on device),
+                         no report to the coordinator, zero (or decayed)
+                         weight in the next Eq. 2.
+    ``straggler_rate`` — probability that a *non-dropped* client
+                         straggles: it trains this round but its report
+                         misses the coordinator deadline (the
+                         coordinator falls back to its last-seen stats).
+    ``delay_s``        — the straggler-delay model: each straggler's
+                         report is late by this many (simulated) wall
+                         seconds; logged per round as ``sim_delay_s``,
+                         never slept.
+    ``stale_decay``    — λ of the staleness-weighted Eq. 2: an absent
+                         client keeps weight |D_h|·λ^staleness instead
+                         of 0 (λ=0 is the hard participation mask —
+                         0^0 == 1 keeps fresh clients at full weight).
+    ``quorum``         — coordinator quorum Q: the coordinator only
+                         recomputes the cluster decision when ≥ Q
+                         clients report this round; below quorum it
+                         re-applies the previous decision (round 0's
+                         singleton fallback included) and the round is
+                         logged ``coordinated=False``.
+
+    All draws are deterministic in ``(seed, round_idx)`` via a dedicated
+    ``default_rng`` stream, so a fault schedule replays bit-for-bit —
+    the determinism contract ``tests/test_churn.py`` pins.
+    """
+    drop_rate: float = 0.0
+    straggler_rate: float = 0.0
+    delay_s: float = 0.0
+    stale_decay: float = 0.0
+    quorum: int = 0
+
+    @property
+    def active(self) -> bool:
+        return (self.drop_rate > 0 or self.straggler_rate > 0
+                or self.quorum > 0)
+
+
+def draw_faults(faults: FleetFaults, n_clients: int, seed: int,
+                round_idx: int):
+    """One round's fault draw: ``(present, straggler)`` bool (N,) arrays.
+    Stragglers are drawn among present clients only (a dropped client
+    has nothing to be late with)."""
+    rng = np.random.default_rng([seed, round_idx, *_FAULT_STREAM_TAG])
+    present = rng.random(n_clients) >= faults.drop_rate
+    straggler = present & (rng.random(n_clients) < faults.straggler_rate)
+    return present, straggler
+
+
 # ------------------------------------------------------------- the driver
 
 
@@ -113,6 +178,14 @@ class FleetRoundLog:
     events: List[str]
     wall_s: float
     coord_s: float
+    # churn-regime fields (defaults = the fault-free run)
+    present: Optional[np.ndarray] = None    # (N,) trained this round
+    reported: Optional[np.ndarray] = None   # (N,) report met the deadline
+    staleness: Optional[np.ndarray] = None  # (N,) rounds since last
+    #                                         participation, post-round
+    coordinated: bool = True           # False on a quorum miss (decision
+    #                                    re-applied, not recomputed)
+    sim_delay_s: float = 0.0           # straggler-delay model, simulated
 
 
 @dataclass
@@ -162,7 +235,7 @@ def _sample_round_batch(model_cfg, clients_data, n_rows: int, seed: int,
 
 def export_fleet_checkpoint(path, model, sparams, clusters, weights, *,
                             round_idx: int, n_clusters: int,
-                            mean_val_acc: float = 0.0):
+                            mean_val_acc: float = 0.0, present=None):
     """Serialize the swarm state for ``repro.serve``.
 
     Applies the round's pending Eq. 2 (the aggregation the NEXT round
@@ -171,10 +244,21 @@ def export_fleet_checkpoint(path, model, sparams, clusters, weights, *,
     ``extra`` sufficient to rebuild the model serve-side with no
     training code: the full ``ModelConfig`` asdict, client count,
     |D_h| weights and the cluster decision.
+
+    ``present`` (optional (N,) bool) switches the pending Eq. 2 onto the
+    churn-masked variant with ``weights`` taken as the *effective*
+    (staleness-decayed) weights — the exact aggregation the next driver
+    round would execute, so a churn-regime checkpoint matches what the
+    swarm would actually serve. ``None`` keeps the plain aggregate.
     """
-    agg = cluster_fedavg(sparams, jnp.asarray(clusters),
-                         jnp.asarray(weights, jnp.float32),
-                         k=len(np.asarray(clusters)))
+    w = jnp.asarray(weights, jnp.float32)
+    if present is None:
+        agg = cluster_fedavg(sparams, jnp.asarray(clusters), w,
+                             k=len(np.asarray(clusters)))
+    else:
+        agg = cluster_fedavg_masked(sparams, jnp.asarray(clusters), w,
+                                    jnp.asarray(present, bool),
+                                    k=len(np.asarray(clusters)))
     save_checkpoint(path, agg, step=round_idx + 1, extra={
         "model_config": asdict(model.cfg),
         "n_clients": int(len(np.asarray(clusters))),
@@ -192,6 +276,7 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
               use_pallas_stats: bool = False, eval_batch: int = 64,
               eval_buckets: int = 0, bucket_strategy: str = "pow2",
               ckpt_path=None, ckpt_every: int = 0,
+              faults: Optional[FleetFaults] = None,
               verbose: bool = False) -> FleetRunResult:
     """Drive ``rounds`` full BSO-SL rounds on ``mesh`` with exactly ONE
     compiled fleet-round executable.
@@ -214,19 +299,35 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
     are identical to the in-program rectangular eval (same
     post-local-phase params, same masked reduction —
     ``tests/test_fleet.py`` pins the parity).
+
+    ``faults`` (a :class:`FleetFaults` with any knob active) switches
+    the driver onto the churn regime — still ONE compiled executable:
+    the round program is built ``with_churn`` (two extra (N,) bool
+    operands) and the host injects per-round Bernoulli drops and
+    straggler delays, applies the quorum rule to the coordinator, and
+    carries the staleness counters that decay the Eq. 2 weights. Because
+    the fleet aggregates FIRST, round ``r``'s incoming Eq. 2 uses round
+    ``r-1``'s presence mask and post-round staleness — exactly the sim
+    engine's churn semantics shifted by the pending-aggregation offset.
+    An all-knobs-off ``FleetFaults()`` (or ``None``) keeps the
+    churn-free program.
     """
     N = len(clients_data)
     if n_clusters > N:
         raise ValueError(f"n_clusters={n_clusters} > n_clients={N}")
     bucketed = eval_buckets > 0
+    churn = faults is not None and faults.active
     program = fleet_setup(model, opt, mesh, k=N, n_local_steps=local_steps,
                           use_pallas_stats=use_pallas_stats,
                           with_eval=not bucketed, with_loss=bucketed,
-                          donate=True, spmd="shard_map")
+                          donate=True, spmd="shard_map",
+                          with_churn=churn)
+    in_sh = program.in_shardings[:-2] if churn else program.in_shardings
     if bucketed:
-        _, _, bsh, lsh, csh, wsh = program.in_shardings
+        _, _, bsh, lsh, csh, wsh = in_sh
     else:
-        _, _, bsh, vsh, lsh, csh, wsh = program.in_shardings
+        _, _, bsh, vsh, lsh, csh, wsh = in_sh
+    msh = program.in_shardings[-1] if churn else None
     lr_arr = jax.device_put(jnp.float32(lr), lsh)
 
     with mesh, use_sharding(mesh, program.rules):
@@ -259,10 +360,27 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
             val = jax.device_put(
                 stack_eval_split(model.cfg, clients_data, "val",
                                  batch=eval_batch), vsh)
-        weights = jax.device_put(
-            np.asarray([c["n_train"] for c in clients_data], np.float32),
-            wsh)
+        base_w = np.asarray([c["n_train"] for c in clients_data],
+                            np.float32)
+        weights = jax.device_put(base_w, wsh)
         clusters = np.asarray(singleton_assignments(N))
+
+        # churn-regime host state: staleness counters (rounds since last
+        # participation), the previous round's presence (the pending
+        # Eq. 2's receive mask — all-ones before round 0), and the
+        # coordinator's last-seen report cache for stragglers
+        staleness = np.zeros(N, np.int32)
+        prev_present = np.ones(N, bool)
+        have_cache = np.zeros(N, bool)
+        last_stats, last_val = None, None
+        centers = np.full(n_clusters, -1, np.int32)   # no decision yet
+
+        def eff_weights():
+            # |D_h| * λ^staleness — λ=0 is the hard mask (0^0 == 1
+            # keeps fresh clients at full weight, matching the engine's
+            # jnp.power semantics bitwise for integer exponents)
+            return base_w * np.power(np.float32(faults.stale_decay),
+                                     staleness.astype(np.float32))
 
         def put_batch(r):
             batch = _sample_round_batch(model.cfg, clients_data,
@@ -272,14 +390,18 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
         # ONE lowering -> ONE executable for every round
         t0 = time.perf_counter()
         batch0 = put_batch(0)
+        mask_ops = ()
+        if churn:
+            mask_ops = (jax.device_put(np.ones(N, bool), msh),
+                        jax.device_put(np.ones(N, bool), msh))
         if bucketed:
             lowered = program.jit_fn.lower(
                 sparams, sopt, batch0, lr_arr,
-                jax.device_put(clusters, csh), weights)
+                jax.device_put(clusters, csh), weights, *mask_ops)
         else:
             lowered = program.jit_fn.lower(
                 sparams, sopt, batch0, val, lr_arr,
-                jax.device_put(clusters, csh), weights)
+                jax.device_put(clusters, csh), weights, *mask_ops)
         compiled = lowered.compile()
         compile_s = time.perf_counter() - t0
         batch_bytes = sum(x.size * x.dtype.itemsize
@@ -296,10 +418,21 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
             # the same work: sample + upload + round step + stat pull
             batch = put_batch(r)
             applied = clusters
+            extra = ()
+            present = straggler = reported = None
+            if churn:
+                present, straggler = draw_faults(faults, N, seed, r)
+                reported = present & ~straggler
+                # the incoming Eq. 2 is the PREVIOUS round's pending
+                # aggregation: its receive mask is last round's presence
+                # and its weights carry last round's post-round staleness
+                weights = jax.device_put(eff_weights(), wsh)
+                extra = (jax.device_put(present, msh),
+                         jax.device_put(prev_present, msh))
             if bucketed:
                 sparams, sopt, stats_dev, loss_dev = compiled(
                     sparams, sopt, batch, lr_arr,
-                    jax.device_put(applied, csh), weights)
+                    jax.device_put(applied, csh), weights, *extra)
                 stats = np.asarray(stats_dev)
                 # per-bucket scoring of the returned post-local-phase
                 # params — the same protocol point as the in-program eval
@@ -310,46 +443,116 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
             else:
                 sparams, sopt, out = compiled(
                     sparams, sopt, batch, val, lr_arr,
-                    jax.device_put(applied, csh), weights)
+                    jax.device_put(applied, csh), weights, *extra)
                 # the ONLY device->host pull: the tiny FleetRoundOut
                 stats = np.asarray(out.stats)
                 val_acc = np.asarray(out.val_acc)
                 train_loss = float(out.train_loss)
             t1 = time.perf_counter()
-            clusters, centers, events = host_coordinator(
-                stats, val_acc, k=n_clusters, p1=p1, p2=p2,
-                kmeans_iters=kmeans_iters, seed=seed, round_idx=r)
+            coordinated = True
+            events: List[str] = []
+            if churn:
+                # post-round state: presence resets staleness, absence
+                # accrues it; this round's mask gates the NEXT Eq. 2
+                staleness = np.where(present, 0, staleness + 1) \
+                    .astype(np.int32)
+                prev_present = present
+                # the coordinator sees fresh reports only from clients
+                # that met the deadline; stragglers/dropped fall back to
+                # their last-seen report (a dropped client's params are
+                # frozen, so its freshly computed stats equal its stale
+                # ones — no information leak either way)
+                stats_used, val_used = stats.copy(), val_acc.copy()
+                if last_stats is not None:
+                    miss = ~reported & have_cache
+                    stats_used[miss] = last_stats[miss]
+                    val_used[miss] = last_val[miss]
+                else:
+                    last_stats = np.zeros_like(stats)
+                    last_val = np.zeros_like(val_acc)
+                last_stats[reported] = stats[reported]
+                last_val[reported] = val_acc[reported]
+                have_cache |= reported
+                n_rep = int(reported.sum())
+                if faults.quorum and n_rep < faults.quorum:
+                    # quorum miss: re-apply the previous decision (round
+                    # 0's singleton fallback included) — deterministic,
+                    # and the skipped coordinator stream is simply never
+                    # drawn for this round_idx
+                    coordinated = False
+                    events = [f"quorum miss: {n_rep}/{N} reported "
+                              f"< Q={faults.quorum}; previous cluster "
+                              "decision re-applied"]
+                else:
+                    clusters, centers, events = host_coordinator(
+                        stats_used, val_used, k=n_clusters, p1=p1, p2=p2,
+                        kmeans_iters=kmeans_iters, seed=seed, round_idx=r)
+            else:
+                clusters, centers, events = host_coordinator(
+                    stats, val_acc, k=n_clusters, p1=p1, p2=p2,
+                    kmeans_iters=kmeans_iters, seed=seed, round_idx=r)
             t2 = time.perf_counter()
             log = FleetRoundLog(
                 round=r, mean_val_acc=float(val_acc.mean()),
                 val_acc=val_acc, train_loss=train_loss,
                 stats=stats, assignments=clusters, centers=centers,
                 applied_clusters=applied, events=list(events),
-                wall_s=t1 - t0, coord_s=t2 - t1)
+                wall_s=t1 - t0, coord_s=t2 - t1,
+                present=present, reported=reported,
+                staleness=staleness.copy() if churn else None,
+                coordinated=coordinated,
+                sim_delay_s=float(faults.delay_s) if churn
+                and bool(straggler.any()) else 0.0)
             history.append(log)
-            if ckpt_path and ckpt_every and (r + 1) % ckpt_every == 0 \
-                    and r != rounds - 1:
+            if ckpt_path and ckpt_every and (r + 1) % ckpt_every == 0:
+                # when ckpt_every divides rounds, the _r{rounds} export
+                # is bitwise the final export below — same params, same
+                # decision, same (effective) weights
                 export_fleet_checkpoint(
                     f"{ckpt_path}_r{r + 1}", model, sparams, clusters,
-                    np.asarray(weights), round_idx=r, n_clusters=n_clusters,
-                    mean_val_acc=log.mean_val_acc)
+                    eff_weights() if churn else base_w, round_idx=r,
+                    n_clusters=n_clusters, mean_val_acc=log.mean_val_acc,
+                    present=present if churn else None)
             if verbose:
+                flag = "" if coordinated else " [quorum miss]"
                 print(f"[fleet] round {r}: val_acc={log.mean_val_acc:.3f} "
                       f"loss={log.train_loss:.3f} "
                       f"clusters={np.bincount(clusters, minlength=n_clusters)}"
-                      f" events={len(events)} wall={log.wall_s:.2f}s")
+                      f" events={len(events)} wall={log.wall_s:.2f}s{flag}")
 
-    if ckpt_path and history:
-        # final export: fold in the pending Eq. 2 (see module docstring)
-        export_fleet_checkpoint(
-            ckpt_path, model, sparams, history[-1].assignments,
-            np.asarray(weights), round_idx=rounds - 1,
-            n_clusters=n_clusters, mean_val_acc=history[-1].mean_val_acc)
+    if ckpt_path:
+        if history:
+            # final export: fold in the pending Eq. 2 (see module
+            # docstring) — under churn, the masked variant with the
+            # staleness-decayed weights the next round would apply
+            export_fleet_checkpoint(
+                ckpt_path, model, sparams, history[-1].assignments,
+                eff_weights() if churn else base_w, round_idx=rounds - 1,
+                n_clusters=n_clusters,
+                mean_val_acc=history[-1].mean_val_acc,
+                present=prev_present if churn else None)
+        else:
+            # rounds=0 used to silently skip the export; save the
+            # initial swarm under the identity Eq. 2 instead so the
+            # caller always gets the checkpoint it asked for
+            warnings.warn(
+                "run_fleet(rounds=0) with ckpt_path: no rounds executed "
+                "— exporting the initial (untrained) swarm params under "
+                "the singleton identity Eq. 2", stacklevel=2)
+            export_fleet_checkpoint(
+                ckpt_path, model, sparams, clusters, base_w,
+                round_idx=-1, n_clusters=n_clusters, mean_val_acc=0.0)
     meta = dict(n_clients=N, rounds=rounds, local_steps=local_steps,
                 batch_size=batch_size, lr=lr, n_clusters=n_clusters, p1=p1,
                 p2=p2, seed=seed, mesh_shape=dict(mesh.shape),
                 n_devices=mesh.size,
-                eval_buckets=len(eval_progs) if bucketed else 0)
+                eval_buckets=len(eval_progs) if bucketed else 0,
+                faults=None if faults is None else {
+                    "drop_rate": faults.drop_rate,
+                    "straggler_rate": faults.straggler_rate,
+                    "delay_s": faults.delay_s,
+                    "stale_decay": faults.stale_decay,
+                    "quorum": faults.quorum})
     # measured, not asserted: the AOT `compiled` path performs exactly the
     # one .compile() above, and any (future) direct jit_fn dispatches
     # would land in its trace cache — so this catches a regression that
@@ -383,18 +586,38 @@ def main():
                          "(npz + manifest) for repro.serve")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="also export every N rounds (PATH_r<N>)")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="per-round Bernoulli client-drop probability "
+                         "(fault injection; 0 = churn-free)")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    help="probability a present client reports late")
+    ap.add_argument("--straggler-delay", type=float, default=0.0,
+                    help="simulated straggler report delay in seconds "
+                         "(logged, never slept)")
+    ap.add_argument("--stale-decay", type=float, default=0.0,
+                    help="λ of the staleness-weighted Eq. 2 "
+                         "(0 = hard participation mask)")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="coordinator quorum Q: recompute clusters only "
+                         "when >= Q clients report (0 = always)")
     args = ap.parse_args()
     if args.devices:
         force_host_device_count(args.devices)
     model, opt, mesh, clients = make_unit_fleet(
         args.clients, image_size=args.image_size,
         data_scale=args.data_scale, seed=args.seed)
+    faults = FleetFaults(drop_rate=args.drop_rate,
+                         straggler_rate=args.straggler_rate,
+                         delay_s=args.straggler_delay,
+                         stale_decay=args.stale_decay,
+                         quorum=args.quorum)
     res = run_fleet(model, opt, mesh, clients, rounds=args.rounds,
                     local_steps=args.local_steps,
                     batch_size=args.batch_size, seed=args.seed,
                     use_pallas_stats=args.pallas_stats,
                     eval_buckets=args.eval_buckets,
                     ckpt_path=args.ckpt, ckpt_every=args.ckpt_every,
+                    faults=faults if faults.active else None,
                     verbose=True)
     if args.ckpt:
         print(f"[fleet] checkpoint -> {args.ckpt}.npz")

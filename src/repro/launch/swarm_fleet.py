@@ -72,7 +72,7 @@ class FleetProgram(NamedTuple):
 def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                 use_pallas_stats: bool = False, with_eval: bool = False,
                 with_loss: bool = False, donate: bool = False,
-                spmd: str = "auto") -> FleetProgram:
+                spmd: str = "auto", with_churn: bool = False) -> FleetProgram:
     """ONE setup path for the fleet round on a ``pod``-axis mesh —
     the dry-run lowering (:func:`lower_fleet_round`) and the end-to-end
     driver (``repro.launch.fleet_driver``) both build their program
@@ -103,6 +103,12 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
     fixed-shape compiled program per size bucket — and returns the
     replicated last-step loss alongside the stats.
 
+    ``with_churn`` appends the fault-injection operands — two (N,)
+    bool masks ``(present, agg_present)`` sharded over the client axis
+    (see ``engine.make_fleet_round(with_churn=True)``); the driver's
+    quorum/staleness regime feeds them per round, and all-ones masks
+    reproduce the churn-free program bitwise.
+
     The coordinator inputs (``clusters``, ``weights``) ride the client
     axis and the stat upload comes back sharded over ``pod``.
     ``donate=True`` donates the params/opt buffers (the driver's round
@@ -129,7 +135,8 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                                       use_pallas=use_pallas_stats,
                                       with_eval=with_eval,
                                       with_loss=with_loss,
-                                      axis_name="pod")
+                                      axis_name="pod",
+                                      with_churn=with_churn)
 
         def local_step(*args):
             # every mesh axis is manual inside the shard_map body, so
@@ -151,6 +158,8 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
         else:
             in_specs = (pod, pod, pod, P(), pod, pod)
             out_specs = (pod, pod, pod)
+        if with_churn:
+            in_specs = in_specs + (pod, pod)    # present, agg_present
         # check_rep off: several conv/reduce-window primitives lack
         # replication rules in this jax version
         round_step = shard_map(local_step, mesh=mesh, in_specs=in_specs,
@@ -178,7 +187,8 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
         round_step = make_fleet_round(model, opt, k, n_local_steps,
                                       use_pallas=use_pallas_stats,
                                       with_eval=with_eval,
-                                      with_loss=with_loss)
+                                      with_loss=with_loss,
+                                      with_churn=with_churn)
         if with_eval:
             in_sh = (psh, osh, bsh, ssh, None, rep, rep)
             out_sh = (psh, osh, FleetRoundOut(stats=ssh, val_acc=ssh,
@@ -189,6 +199,8 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
         else:
             in_sh = (psh, osh, bsh, None, rep, rep)
             out_sh = (psh, osh, ssh)
+        if with_churn:
+            in_sh = in_sh + (rep, rep)          # present, agg_present
     jit_fn = jax.jit(round_step, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=(0, 1) if donate else ())
     return FleetProgram(jit_fn=jit_fn, rules=rules, in_shardings=in_sh,

@@ -15,7 +15,9 @@
 # Stage 4 is the fleet smoke: 2 end-to-end driver rounds on the pod
 # mesh (stats -> host k-means/BSA -> next round's clusters) with
 # compile-count == 1 for the round step.
-# Stage 5 is the serve smoke: the continuous-batching engine drains a
+# Stage 5 is the churn smoke: the dropout x stale-decay scenario grid
+# must lower to ONE vmapped executable with presence/staleness tracked.
+# Stage 6 is the serve smoke: the continuous-batching engine drains a
 # mixed-length workload with exactly one prefill + one decode
 # executable per bucket.
 set -euo pipefail
@@ -26,5 +28,6 @@ python -m pytest -x -q tests/test_engine.py::test_engine_smoke
 python -m pytest -x -q tests/test_sweep.py::test_sweep_smoke_one_program
 python -m pytest -x -q tests/test_grid.py::test_grid_smoke_one_program
 python -m pytest -x -q tests/test_fleet.py::test_fleet_driver_smoke
+python -m pytest -x -q tests/test_churn.py::test_churn_smoke_one_program
 python -m pytest -x -q tests/test_serve.py::test_engine_smoke_program_budget
 exec python -m pytest -x -q "$@"

@@ -1,0 +1,417 @@
+"""Churn-robustness harness: participation masks, staleness-weighted
+Eq. 2, and the fleet fault-injection/quorum regime (PR 8).
+
+Acceptance properties:
+
+* the churn-free anchor — a churn row with ``dropout=0`` (or an
+  explicit all-ones mask) is BITWISE the plain ``run_rounds`` program:
+  params, opt state, losses, accuracies and assignments (keys are
+  consumed unconditionally, every mask op is a float identity),
+* a dropout-robustness sweep is ONE vmapped executable whose rows
+  reproduce the serial masked oracle bit-for-bit,
+* churn semantics — absent clients are frozen bitwise for the round,
+  staleness counters reset on participation, an all-absent cluster
+  rides the k-means empty-cluster reseed and the masked Eq. 2's
+  zero-weight guard (no NaNs, receivers keep their own params),
+* the fleet regime — seeded fault injection replays deterministically,
+  the quorum rule re-applies the previous decision below Q reports,
+  the all-ones churn program is bitwise the churn-free driver, and the
+  checkpoint-export fixes hold (periodic ``_r{R}`` == final export;
+  ``rounds=0`` warns and still exports).
+"""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, SwarmConfig
+from repro.core.aggregation import cluster_fedavg, cluster_fedavg_masked
+from repro.core.baselines import run_grid_point, run_grid_table, sweep_keys
+from repro.core.engine import (EngineConfig, churn_params, grid_axes,
+                               jit_run_grid, jit_run_rounds,
+                               make_grid_config, make_grid_state,
+                               make_swarm_data, make_swarm_state, run_grid)
+from repro.core.kmeans import kmeans, lloyd_step
+from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.launch.fleet_driver import (FleetFaults, draw_faults,
+                                       host_coordinator, make_unit_fleet,
+                                       run_fleet)
+from repro.launch.mesh import make_fleet_mesh
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+
+N_CLIENTS = 8
+SMALL_TABLE = np.maximum(TABLE_I // 16,
+                         (TABLE_I > 0).astype(np.int64) * 2)[:, :N_CLIENTS]
+OPT = OptimizerConfig(name="adam", lr=2e-3)
+
+#: the acceptance churn grid: dropout x stale-decay, one executable
+CHURN_AXES = dict(dropout=(0.0, 0.3), stale_decay=(0.0, 0.5))
+
+
+@pytest.fixture(scope="module")
+def dr_clients():
+    return make_dr_swarm_data(image_size=16, seed=0, table=SMALL_TABLE)
+
+
+@pytest.fixture(scope="module")
+def dr_model():
+    return build_model(get_config("squeezenet-dr"))
+
+
+def _cfg(model, *, local_steps=2, n_clusters=3):
+    return EngineConfig(model=model, opt=make_optimizer(OPT),
+                        local_steps=local_steps, batch_size=8, lr=2e-3,
+                        aggregation="bso", n_clusters=n_clusters,
+                        p1=0.9, p2=0.8, kmeans_iters=10)
+
+
+def _swarm(rounds=2, local_steps=2, n_clusters=3):
+    return SwarmConfig(n_clients=N_CLIENTS, n_clusters=n_clusters,
+                      rounds=rounds, local_steps=local_steps,
+                      kmeans_iters=10)
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ----------------------------------------------------- one-program property
+
+
+def test_churn_smoke_one_program(dr_clients, dr_model):
+    """Fail-fast stage for test.sh: the dropout x stale-decay churn
+    grid lowers to ONE executable, runs 2 rounds with finite metrics,
+    per-round presence in the metrics and staleness in the state."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    specs = grid_axes(**CHURN_AXES)
+    G = len(specs)
+    keys = jax.random.split(jax.random.PRNGKey(0), G)
+    states = make_grid_state(dr_model, cfg.opt, dr_clients, keys)
+    grid = make_grid_config(cfg, N_CLIENTS, specs)
+
+    lowered = jax.jit(run_grid, static_argnames=("cfg", "rounds")).lower(
+        states, data, cfg, grid, 2)
+    compiled = lowered.compile()
+    s, ms = compiled(states, data, grid)
+
+    assert np.isfinite(np.asarray(ms.mean_val_acc)).all()
+    assert np.isfinite(np.asarray(ms.train_loss)).all()
+    present = np.asarray(ms.present)
+    assert present.shape == (G, 2, N_CLIENTS) and present.dtype == bool
+    # dropout=0 rows are always fully present
+    drops = np.asarray([sp["dropout"] for sp in specs])
+    assert present[drops == 0.0].all()
+    stale = np.asarray(s.staleness)
+    assert stale.shape == (G, N_CLIENTS) and (stale >= 0).all()
+    # staleness is exactly the run length of trailing absences
+    last = present[:, -1]
+    assert ((stale == 0) == last).all()
+
+    # module entry point: cache hit on re-dispatch, no recompiles
+    states = make_grid_state(dr_model, cfg.opt, dr_clients, keys)
+    n0 = jit_run_grid._cache_size()
+    s2, _ = jit_run_grid(states, data, cfg, grid, 2)
+    assert jit_run_grid._cache_size() <= n0 + 1
+    n1 = jit_run_grid._cache_size()
+    jit_run_grid(jax.tree.map(jnp.copy, s2), data, cfg, grid, 2)
+    assert jit_run_grid._cache_size() == n1, "churn grid recompiled"
+
+
+# ----------------------------------------------------- the bitwise anchor
+
+
+def test_allones_churn_bitwise_plain(dr_clients, dr_model):
+    """The parity contract the whole axis hangs off: ``dropout=0.0``
+    (and an explicit all-ones mask) reproduce the churn-free program
+    bitwise — params, opt state, losses, accuracies, assignments."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    runs = {}
+    for name, churn in [
+            ("plain", None),
+            ("dropout0", churn_params(dropout=0.0)),
+            ("ones", churn_params(mask=np.ones(N_CLIENTS, bool)))]:
+        state = make_swarm_state(dr_model, cfg.opt, dr_clients,
+                                 jax.random.PRNGKey(0))
+        runs[name] = jit_run_rounds(state, data, cfg, 3, None, churn)
+    s0, m0 = runs["plain"]
+    for name in ("dropout0", "ones"):
+        s, m = runs[name]
+        _params_equal(s0.params, s.params)
+        _params_equal(s0.opt_state, s.opt_state)
+        np.testing.assert_array_equal(np.asarray(m0.train_loss),
+                                      np.asarray(m.train_loss))
+        np.testing.assert_array_equal(np.asarray(m0.mean_val_acc),
+                                      np.asarray(m.mean_val_acc))
+        np.testing.assert_array_equal(np.asarray(m0.assignments),
+                                      np.asarray(m.assignments))
+        assert np.asarray(m.present).all()
+        assert (np.asarray(s.staleness) == 0).all()
+
+
+def test_churn_grid_rows_match_serial_oracle(dr_clients, dr_model):
+    """Row g of the ONE vmapped churn-grid program == the serial
+    ``run_grid_point`` slice with the same key — bitwise final params,
+    equal accuracies (the grid-vs-serial contract of tests/test_grid.py
+    extended to the churn axes)."""
+    swarm = _swarm()
+    key = jax.random.PRNGKey(42)
+    results, grid_run = run_grid_table(dr_model, dr_clients, swarm, OPT,
+                                       key, axes=CHURN_AXES, batch_size=8)
+    specs = grid_axes(**CHURN_AXES)
+    keys = sweep_keys(key, specs)
+    for g, spec in enumerate(specs):
+        acc, run = run_grid_point(spec, dr_model, dr_clients, swarm, OPT,
+                                  keys[g], batch_size=8)
+        _params_equal(jax.tree.map(lambda x: x[g], grid_run.state.params),
+                      run.state.params)
+        assert results[g]["acc"] == acc
+        np.testing.assert_array_equal(
+            np.asarray(grid_run.metrics.present)[g],
+            np.asarray(run.metrics.present))
+
+
+# ------------------------------------------------------- churn semantics
+
+
+def test_single_client_present_round(dr_clients, dr_model):
+    """A round where only one client participates: the present client
+    trains (params move), every absent client is frozen BITWISE (masked
+    no-op local phase, no Eq. 2 receive), and nothing is NaN."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    mask = np.zeros((1, N_CLIENTS), bool)
+    mask[0, 3] = True
+    state = make_swarm_state(dr_model, cfg.opt, dr_clients,
+                             jax.random.PRNGKey(7))
+    p_before = jax.tree.map(jnp.copy, state.params)
+    s, ms = jit_run_rounds(state, data, cfg, 1, None,
+                           churn_params(mask=mask))
+    moved = False
+    for x, y in zip(jax.tree.leaves(p_before), jax.tree.leaves(s.params)):
+        x, y = np.asarray(x), np.asarray(y)
+        assert np.isfinite(y).all()
+        np.testing.assert_array_equal(x[~mask[0]], y[~mask[0]])
+        moved |= not np.array_equal(x[3], y[3])
+    assert moved, "the present client never trained"
+    np.testing.assert_array_equal(np.asarray(ms.present)[0], mask[0])
+    np.testing.assert_array_equal(np.asarray(s.staleness),
+                                  np.where(mask[0], 0, 1))
+
+
+def test_staleness_resets_on_participation(dr_clients, dr_model):
+    """Staleness follows the recurrence ``where(present, 0, s+1)``
+    under an explicit (rounds, N) schedule — resets the round a client
+    comes back, accrues while it is away."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    rng = np.random.default_rng(5)
+    sched = rng.random((4, N_CLIENTS)) > 0.4
+    sched[:, 0] = True          # one always-on client anchors Eq. 2
+    state = make_swarm_state(dr_model, cfg.opt, dr_clients,
+                             jax.random.PRNGKey(1))
+    s, ms = jit_run_rounds(state, data, cfg, 4, None,
+                           churn_params(stale_decay=0.5, mask=sched))
+    np.testing.assert_array_equal(np.asarray(ms.present), sched)
+    expect = np.zeros(N_CLIENTS, np.int64)
+    for r in range(4):
+        expect = np.where(sched[r], 0, expect + 1)
+    np.testing.assert_array_equal(np.asarray(s.staleness), expect)
+    assert np.isfinite(np.asarray(ms.mean_val_acc)).all()
+
+
+def test_masked_fedavg_all_absent_cluster():
+    """The masked Eq. 2 guard: a cluster whose every member is absent
+    aggregates nothing — its members keep their own params bitwise, no
+    NaN from the zero total — and with all-ones presence the masked
+    variant is BITWISE ``cluster_fedavg``."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(6, 3, 2)), jnp.float32)}
+    assignments = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    n = jnp.asarray([10., 20., 30., 40., 50., 60.])
+    # cluster 1 entirely absent (hard mask -> zero weights)
+    present = jnp.asarray([1, 1, 0, 0, 1, 1], bool)
+    w = n * present.astype(jnp.float32)
+    out = cluster_fedavg_masked(params, assignments, w, present, k=3)
+    for kk in params:
+        o = np.asarray(out[kk])
+        assert np.isfinite(o).all()
+        # absent members of the dead cluster keep their own params
+        np.testing.assert_array_equal(o[2:4], np.asarray(params[kk])[2:4])
+        # live clusters aggregate normally (members agree pairwise)
+        np.testing.assert_array_equal(o[0], o[1])
+        np.testing.assert_array_equal(o[4], o[5])
+    # all-ones bitwise anchor
+    ones = jnp.ones(6, bool)
+    ref = cluster_fedavg(params, assignments, n, k=3)
+    got = cluster_fedavg_masked(params, assignments, n * 1.0, ones, k=3)
+    for kk in params:
+        np.testing.assert_array_equal(np.asarray(ref[kk]),
+                                      np.asarray(got[kk]))
+
+
+def test_masked_kmeans_all_absent_cluster_reseeds():
+    """A cluster that captures only absent points counts as EMPTY and
+    rides the existing far-point reseed, restricted to present
+    candidates; with an all-ones mask the masked k-means is bitwise the
+    unmasked run."""
+    # two tight groups far apart; the second group is entirely absent
+    rng = np.random.default_rng(3)
+    X = np.concatenate([rng.normal(0.0, .1, size=(6, 2)),
+                        rng.normal(50.0, .1, size=(4, 2))]).astype(np.float32)
+    mask = np.asarray([True] * 6 + [False] * 4)
+    C = np.asarray([[0.0, 0.0], [50.0, 50.0]], np.float32)  # c1 -> absent
+    newC = np.asarray(lloyd_step(jnp.asarray(X), jnp.asarray(C), 2,
+                                 mask=jnp.asarray(mask)))
+    assert np.isfinite(newC).all()
+    # the reseeded centroid is a PRESENT point, not an absent one
+    d_present = np.linalg.norm(X[:6] - newC[1], axis=1).min()
+    d_absent = np.linalg.norm(X[6:] - newC[1], axis=1).min()
+    assert d_present == 0.0 and d_absent > 1.0
+    # all-ones mask == unmasked, bitwise
+    key = jax.random.PRNGKey(0)
+    C_ref, a_ref = kmeans(key, jnp.asarray(X), 3, iters=5)
+    C_m, a_m = kmeans(key, jnp.asarray(X), 3, iters=5,
+                      mask=jnp.ones(len(X), bool))
+    np.testing.assert_array_equal(np.asarray(C_ref), np.asarray(C_m))
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_m))
+
+
+def test_churn_validation_errors(dr_clients, dr_model):
+    """Construction-time guards: churn grids refuse the sorted
+    local-steps schedule, mixed churn/non-churn grids must be made
+    explicit, and churn_params validates its ranges."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    with pytest.raises(ValueError):
+        churn_params(dropout=1.5)
+    with pytest.raises(ValueError):
+        churn_params(stale_decay=-0.1)
+    with pytest.raises(ValueError):
+        make_grid_config(cfg, N_CLIENTS, [{"dropout": 0.3}, {"k": 2}])
+    grid = make_grid_config(cfg, N_CLIENTS,
+                            [{"dropout": 0.0}, {"dropout": 0.3}])
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    states = make_grid_state(dr_model, cfg.opt, dr_clients, keys)
+    with pytest.raises(ValueError):
+        run_grid(states, data, cfg, grid, 2,
+                 schedule=((0, 1), jnp.asarray([2, 2])))
+
+
+# ---------------------------------------------------------- fleet regime
+
+
+def test_fleet_allones_churn_program_bitwise(dr_model, dr_clients):
+    """The churn-program driver with every fault knob off except the
+    (always-met) quorum is BITWISE the churn-free driver: same stats,
+    accuracies, decisions, losses — one executable each."""
+    mesh = make_fleet_mesh(N_CLIENTS)
+    kw = dict(rounds=2, local_steps=2, batch_size=8, seed=0)
+    opt = make_optimizer(OPT)
+    res = run_fleet(dr_model, opt, mesh, dr_clients, **kw)
+    res_c = run_fleet(dr_model, make_optimizer(OPT), mesh, dr_clients,
+                      faults=FleetFaults(quorum=1), **kw)
+    assert res.n_compiles == 1 and res_c.n_compiles == 1
+    for a, b in zip(res.history, res_c.history):
+        np.testing.assert_array_equal(a.stats, b.stats)
+        np.testing.assert_array_equal(a.val_acc, b.val_acc)
+        np.testing.assert_array_equal(a.assignments, b.assignments)
+        assert a.train_loss == b.train_loss
+        assert b.coordinated and b.present.all() and b.reported.all()
+    _params_equal(res.params, res_c.params)
+
+
+def test_fleet_quorum_determinism(dr_model, dr_clients):
+    """The fault-injected driver replays bit-for-bit, quorum-missed
+    rounds re-apply the previous decision, and coordinated rounds are
+    exactly ``host_coordinator`` on the effective (last-seen-filled)
+    stats the log lets us reconstruct."""
+    mesh = make_fleet_mesh(N_CLIENTS)
+    fa = FleetFaults(drop_rate=0.4, straggler_rate=0.3, delay_s=1.0,
+                     stale_decay=0.5, quorum=5)
+    kw = dict(rounds=4, local_steps=2, batch_size=8, seed=0, faults=fa)
+    res = run_fleet(dr_model, make_optimizer(OPT), mesh, dr_clients, **kw)
+    res2 = run_fleet(dr_model, make_optimizer(OPT), mesh, dr_clients, **kw)
+    assert res.n_compiles == 1
+    assert any(not log.coordinated for log in res.history) or \
+        all(log.reported.sum() >= fa.quorum for log in res.history)
+
+    last_stats = np.zeros_like(res.history[0].stats)
+    last_val = np.zeros(N_CLIENTS, np.float32)
+    have = np.zeros(N_CLIENTS, bool)
+    prev_assign = np.arange(N_CLIENTS, dtype=np.int32)
+    for r, (log, log2) in enumerate(zip(res.history, res2.history)):
+        # replay determinism
+        np.testing.assert_array_equal(log.assignments, log2.assignments)
+        np.testing.assert_array_equal(log.val_acc, log2.val_acc)
+        assert log.coordinated == log2.coordinated
+        # the fault draw is the documented pure function
+        present, straggler = draw_faults(fa, N_CLIENTS, 0, r)
+        np.testing.assert_array_equal(log.present, present)
+        np.testing.assert_array_equal(log.reported, present & ~straggler)
+        assert log.sim_delay_s == (fa.delay_s if straggler.any() else 0.0)
+        # reconstruct the coordinator's view and replay its decision
+        stats_eff, val_eff = log.stats.copy(), log.val_acc.copy()
+        miss = ~log.reported & have
+        stats_eff[miss] = last_stats[miss]
+        val_eff[miss] = last_val[miss]
+        if log.coordinated:
+            a, c, _ = host_coordinator(stats_eff, val_eff, k=3, p1=0.9,
+                                       p2=0.8, seed=0, round_idx=r)
+            np.testing.assert_array_equal(log.assignments, a)
+            np.testing.assert_array_equal(log.centers, c)
+        else:
+            assert log.reported.sum() < fa.quorum
+            np.testing.assert_array_equal(log.assignments, prev_assign)
+        last_stats[log.reported] = log.stats[log.reported]
+        last_val[log.reported] = log.val_acc[log.reported]
+        have |= log.reported
+        prev_assign = log.assignments
+
+
+def test_fleet_ckpt_periodic_equals_final(dr_model, dr_clients, tmp_path):
+    """Satellite bugfix 1: when ``ckpt_every`` divides ``rounds``, the
+    last periodic export ``_r{rounds}`` is BITWISE the final export —
+    the ``r != rounds - 1`` skip is gone."""
+    mesh = make_fleet_mesh(N_CLIENTS)
+    ck = str(tmp_path / "ck")
+    run_fleet(dr_model, make_optimizer(OPT), mesh, dr_clients, rounds=2,
+              local_steps=2, batch_size=8, seed=0, ckpt_path=ck,
+              ckpt_every=1)
+    final = np.load(ck + ".npz")
+    last = np.load(ck + "_r2.npz")
+    assert set(final.files) == set(last.files)
+    for kk in final.files:
+        np.testing.assert_array_equal(final[kk], last[kk])
+    m_final = json.loads((tmp_path / "ck.json").read_text())
+    m_last = json.loads((tmp_path / "ck_r2.json").read_text())
+    assert m_final["step"] == m_last["step"] == 2
+    # intermediate export exists too
+    assert (tmp_path / "ck_r1.npz").exists()
+
+
+def test_fleet_rounds0_ckpt_warns_and_exports(dr_model, dr_clients,
+                                              tmp_path):
+    """Satellite bugfix 2: ``rounds=0`` with a ckpt_path used to skip
+    the export silently; it now warns and saves the initial swarm under
+    the identity Eq. 2."""
+    mesh = make_fleet_mesh(N_CLIENTS)
+    ck = str(tmp_path / "zero")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        res = run_fleet(dr_model, make_optimizer(OPT), mesh, dr_clients,
+                        rounds=0, seed=0, ckpt_path=ck)
+    assert any("rounds=0" in str(x.message) for x in w)
+    assert (tmp_path / "zero.npz").exists()
+    man = json.loads((tmp_path / "zero.json").read_text())
+    assert man["step"] == 0
+    assert man["extra"]["n_clients"] == N_CLIENTS
+    assert res.history == []
