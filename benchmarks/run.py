@@ -5,6 +5,8 @@
   comm_scaling     — §I/§III.B scalability & communication claim
   cluster_ablation — beyond-paper k / p1 / p2 ablation
   churn_bench      — dropout x stale-decay robustness sweep (one program)
+  hier_bench       — two-tier coordination: O(pods) upload scaling + the
+                     pods==1 bitwise anchor (BENCH_hier.json)
   bucket_bench     — ragged bucketed layout vs rectangular pad-to-max
   kernel_bench     — kernel-layer microbenchmarks
   roofline_report  — §Roofline table from the dry-run artifacts
@@ -39,8 +41,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.quick:
-        from benchmarks import (churn_bench, cluster_ablation, serve_bench,
-                                table2_methods)
+        from benchmarks import (churn_bench, cluster_ablation, hier_bench,
+                                serve_bench, table2_methods)
         print("name,us_per_call,derived")
         table2_methods.run(data_scale=args.data_scale, rounds=2,
                            local_steps=2, image_size=16,
@@ -53,11 +55,16 @@ def main() -> None:
                         stale_decays=(0.0, 0.5), out_json=None)
         serve_bench.run(n_requests=6, max_new=4, max_seq=32, slots=4,
                         cnn_requests=6, cnn_buckets=(1, 4), out_json=None)
+        # two-tier smoke: small Ns, same invariants (O(pods) slope vs
+        # ledger, pods==1 bitwise, compile census), no artifact
+        hier_bench.run(ns=(128, 256), pod_size=32, rounds=2,
+                       local_steps=2, out_json=None)
         return
 
     from benchmarks import (bucket_bench, churn_bench, cluster_ablation,
-                            comm_scaling, kernel_bench, roofline_report,
-                            serve_bench, table2_methods, table3_archs)
+                            comm_scaling, hier_bench, kernel_bench,
+                            roofline_report, serve_bench, table2_methods,
+                            table3_archs)
 
     suites = {
         "comm_scaling": comm_scaling.main,
@@ -69,6 +76,7 @@ def main() -> None:
                                      cluster_ablation.run()),
         "churn_bench": churn_bench.main,
         "bucket_bench": bucket_bench.main,
+        "hier_bench": hier_bench.main,
         "serve_bench": serve_bench.main,
     }
     if args.fast:
@@ -86,6 +94,9 @@ def main() -> None:
             dropouts=(0.0, 0.4), stale_decays=(0.0, 0.5), out_json=None)
         suites["bucket_bench"] = lambda: bucket_bench.run(
             data_scale=scale, rounds=2, local_steps=4, out_json=None)
+        suites["hier_bench"] = lambda: hier_bench.run(
+            ns=(128, 256), pod_size=32, rounds=2, local_steps=4,
+            out_json=None)
         suites["serve_bench"] = lambda: serve_bench.run(
             n_requests=8, max_new=4, max_seq=32, slots=4,
             cnn_requests=8, out_json=None)
@@ -94,8 +105,9 @@ def main() -> None:
         # bench_json/out_json=None); only the full suite's writers —
         # table2_methods.main (BENCH_sweep.json), the default grid_bench
         # (BENCH_grid.json), churn_bench (BENCH_churn.json), bucket_bench
-        # (BENCH_bucket.json) and serve_bench (BENCH_serve.json) — need
-        # the artifact-free variant of the SAME measurement
+        # (BENCH_bucket.json), hier_bench (BENCH_hier.json) and
+        # serve_bench (BENCH_serve.json) — need the artifact-free
+        # variant of the SAME measurement
         suites["table2_methods"] = lambda: table2_methods.run(
             paper_budget_oracle=True)
         suites["cluster_ablation"] = lambda: (
@@ -103,6 +115,7 @@ def main() -> None:
             cluster_ablation.run())
         suites["churn_bench"] = lambda: churn_bench.run(out_json=None)
         suites["bucket_bench"] = lambda: bucket_bench.run(out_json=None)
+        suites["hier_bench"] = lambda: hier_bench.run(out_json=None)
         suites["serve_bench"] = lambda: serve_bench.run(out_json=None)
 
     print("name,us_per_call,derived")

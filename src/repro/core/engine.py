@@ -419,6 +419,70 @@ def make_grid_config(cfg: "EngineConfig", n_clients: int,
 
 
 @dataclass(frozen=True)
+class HierParams:
+    """Static two-tier coordination topology — the million-client axis.
+
+    The flat coordinator is O(N) in clients: every round it clusters
+    the full (N, 2*#tensors) stats matrix and brain-storms over N
+    assignments. ``HierParams`` shards the swarm into *pods* that each
+    run a local k-means over their own members' stats, and the global
+    tier (k-means + brain storm) runs over the ``n_pods * k_local``
+    pod-cluster summaries instead — centroids weighted by member
+    counts (the :func:`repro.core.kmeans.kmeans` ``weights`` axis), a
+    pod-cluster's val score the mean of its members'. A client's
+    global cluster is the composition ``g[pod * k_local + a_local]``;
+    Eq. 2 aggregation is unchanged (N-segment ``cluster_fedavg``), so
+    only the *coordinator* shrinks from O(clients) to O(pods).
+
+    Pod membership is STATIC (tuples — this dataclass is a jit static
+    argument like :class:`EngineConfig`): the topology shapes the
+    program, exactly as bucket membership does in
+    :class:`BucketedSwarmData`. Unequal pods are fine in the sim
+    engine; the fleet surface wants equal contiguous pods (one per
+    mesh shard — see :func:`make_fleet_round`).
+
+    ``hier=None`` everywhere is the flat path untouched; a single-pod
+    ``HierParams`` routes to the flat coordinator *verbatim* (one pod
+    means the pod-local clustering IS the global clustering, so the
+    two-tier math degenerates — the engine short-circuits statically
+    and ``tests/test_hier.py`` pins bitwise equality).
+    """
+    pods: tuple          # tuple[tuple[int, ...], ...] — partition of
+    #                      range(N), pod p's member client ids
+    k_local: int = 2     # per-pod local cluster count
+
+    @property
+    def n_pods(self) -> int:
+        return len(self.pods)
+
+
+def hier_params(n_clients: int, n_pods: int, k_local: int = 2,
+                pods=None) -> HierParams:
+    """Build a validated :class:`HierParams`. Default topology is
+    ``n_pods`` contiguous near-equal pods; pass explicit ``pods``
+    (iterable of member-id iterables) for arbitrary membership.
+    ``k_local`` must fit the smallest pod."""
+    if pods is None:
+        if not 1 <= n_pods <= n_clients:
+            raise ValueError(f"n_pods={n_pods} outside [1, {n_clients}]")
+        bounds = np.linspace(0, n_clients, n_pods + 1).astype(int)
+        pods = tuple(tuple(range(int(a), int(b)))
+                     for a, b in zip(bounds[:-1], bounds[1:]))
+    else:
+        pods = tuple(tuple(int(i) for i in p) for p in pods)
+    seen = sorted(i for p in pods for i in p)
+    if seen != list(range(n_clients)):
+        raise ValueError("pods must partition range(n_clients) — got "
+                         f"{len(seen)} member ids for N={n_clients}")
+    smallest = min(len(p) for p in pods)
+    if not 1 <= int(k_local) <= smallest:
+        raise ValueError(f"k_local={k_local} outside [1, {smallest}] "
+                         "(the smallest pod bounds the local cluster "
+                         "count)")
+    return HierParams(pods=pods, k_local=int(k_local))
+
+
+@dataclass(frozen=True)
 class EngineConfig:
     """Static round configuration (hashable — a jit static argument).
 
@@ -908,6 +972,141 @@ def _coordinate_and_aggregate(params, opt_state, val, n_samples,
     return params, opt_state, assignments, centers, n_rep, n_swap
 
 
+def pod_summaries(feats, val, weights, present, k_local: int,
+                  kmeans_iters: int, key, pods, *,
+                  use_pallas: bool = False):
+    """The pod tier of the hierarchical coordinator: per-pod local
+    k-means over member stats, reduced to O(pods * k_local) summaries.
+
+    ``pods`` is the static membership (tuple of member-id tuples —
+    :attr:`HierParams.pods`); the loop over pods is a static python
+    loop, so unequal pods trace to their own fixed shapes inside the
+    ONE program. Pod ``p`` clusters its members' ``feats`` rows with
+    key ``fold_in(key, p)`` (mask = the members' ``present`` slice, so
+    churn composes exactly as in the flat path), then segment-sums its
+    members into per-pod-cluster summaries.
+
+    Returns ``(centroids (P*kl, F), counts (P*kl,), wsums (P*kl,),
+    valsums (P*kl,), pc_of (N,))`` where ``counts`` are *present*
+    member counts, ``wsums`` sum the members' effective Eq. 2 weights
+    (``weights``), ``valsums`` their val scores, and ``pc_of`` maps
+    each client to its global pod-cluster row ``p * k_local + a_local``
+    (absent clients included — their membership feeds the
+    staleness-weighted Eq. 2, mirroring the masked flat k-means).
+
+    This is exactly the payload the fleet surface uploads to the host
+    coordinator — the O(pods) traffic claim of ``BENCH_hier.json``.
+    """
+    N = val.shape[0]
+    kl = int(k_local)
+    cents, cnts, wss, vss = [], [], [], []
+    pc_of = jnp.zeros((N,), jnp.int32)
+    for p, ids in enumerate(pods):
+        idx = np.asarray(ids)
+        f_p = feats[idx]
+        m_p = None if present is None else present[idx]
+        C_p, a_p = kmeans(jax.random.fold_in(key, p), f_p, k=kl,
+                          iters=kmeans_iters, use_pallas=use_pallas,
+                          mask=m_p)
+        w_p = (jnp.ones((len(ids),), feats.dtype) if m_p is None
+               else m_p.astype(feats.dtype))
+        cents.append(C_p)
+        cnts.append(jax.ops.segment_sum(w_p, a_p, kl))
+        wss.append(jax.ops.segment_sum(weights[idx] * w_p, a_p, kl))
+        vss.append(jax.ops.segment_sum(val[idx] * w_p, a_p, kl))
+        pc_of = pc_of.at[idx].set(p * kl + a_p.astype(jnp.int32))
+    return (jnp.concatenate(cents, axis=0), jnp.concatenate(cnts),
+            jnp.concatenate(wss), jnp.concatenate(vss), pc_of)
+
+
+def global_tier(key_kmeans, k_bso, centroids, counts, valsums, *,
+                k: int, kmeans_iters: int, p1, p2,
+                use_pallas: bool = False):
+    """The global tier of the hierarchical coordinator, over pod
+    summaries instead of clients: member-count-weighted k-means
+    (the centroid-input mode of :func:`repro.core.kmeans.kmeans`) +
+    ``brain_storm_jax`` ranking pod-cluster mean val scores.
+
+    Empty pod-clusters (``counts == 0`` — a pod's k-means left a slot
+    unoccupied, or every member was absent) carry zero k-means weight
+    and a val score of -1.0, so they never win a best-val center and
+    their occasional selection as a random replacement target moves no
+    real clients (they have none) — the same inertness contract the
+    flat path's pad clusters rely on. The brain storm's swap
+    granularity here is a whole pod-cluster: one swap moves every
+    member of the summary row, the price of ranking O(pods) rows
+    instead of O(clients).
+
+    Returns ``(g (P*kl,) pod-cluster -> global cluster, centers_s (k,)
+    best-val summary rows, n_replaced, n_swapped)``.
+    """
+    occupied = counts > 0
+    val_means = jnp.where(occupied,
+                          valsums / jnp.maximum(counts, 1e-9), -1.0)
+    _, g0 = kmeans(key_kmeans, centroids, k=k, iters=kmeans_iters,
+                   use_pallas=use_pallas, weights=counts)
+    g, centers_s, n_rep, n_swap = brain_storm_jax(k_bso, g0, val_means,
+                                                  k, p1, p2)
+    return g, centers_s, n_rep, n_swap
+
+
+def _hier_coordinate_and_aggregate(params, opt_state, val, n_samples,
+                                   cfg: "EngineConfig", hier: HierParams,
+                                   k_kmeans, k_bso, present=None,
+                                   eff_w=None):
+    """The two-tier coordinator + Eq. 2 tail of :func:`swarm_round` —
+    the hierarchical sibling of :func:`_coordinate_and_aggregate`
+    (plain bso path only; the method/grid axes keep the flat
+    coordinator). Pod tier -> global tier -> composed client
+    assignments ``g[pc_of]`` -> the unchanged N-segment Eq. 2."""
+    N = n_samples.shape[0]
+    k = cfg.n_clusters
+    P, kl = hier.n_pods, hier.k_local
+    assert k <= P * kl, (
+        f"hier global tier needs n_clusters={k} <= n_pods*k_local="
+        f"{P * kl} summary rows")
+    feats = swarm_distribution_matrix(params, use_pallas=cfg.use_pallas)
+    # disjoint key streams for the pod tier and the global tier (the
+    # flat path spends k_kmeans directly; fold_in(k_pods, p) per pod)
+    k_pods, k_global = jax.random.split(k_kmeans)
+    w = n_samples if eff_w is None else eff_w
+    centroids, counts, wsums, valsums, pc_of = pod_summaries(
+        feats, val, w, present, kl, cfg.kmeans_iters, k_pods, hier.pods,
+        use_pallas=cfg.use_pallas)
+    g, centers_s, n_rep, n_swap = global_tier(
+        k_global, k_bso, centroids, counts, valsums, k=k,
+        kmeans_iters=cfg.kmeans_iters, p1=cfg.p1, p2=cfg.p2,
+        use_pallas=cfg.use_pallas)
+    assignments = g[pc_of]
+    # RoundMetrics centers want client ids: a summary-row center maps
+    # to its best-val present member (-1 when the row is empty — the
+    # same "no center" convention the method axis uses)
+    member = pc_of[None, :] == jnp.arange(P * kl)[:, None]   # (S, N)
+    if present is not None:
+        member = member & present[None, :]
+    score = jnp.where(member, val[None, :], -jnp.inf)
+    rep = jnp.where(member.any(axis=1),
+                    jnp.argmax(score, axis=1).astype(jnp.int32), -1)
+    centers = jnp.where(centers_s >= 0,
+                        rep[jnp.clip(centers_s, 0, P * kl - 1)], -1)
+    if present is None:
+        params = cluster_fedavg(params, assignments, n_samples, k=N)
+    else:
+        params = cluster_fedavg_masked(params, assignments, eff_w,
+                                       present, k=N)
+    if cfg.reset_opt_each_round:
+        new_opt = jax.vmap(cfg.opt.init)(params)
+        if present is None:
+            opt_state = new_opt
+        else:
+            def sel(new, old):
+                m = present.reshape(present.shape
+                                    + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+            opt_state = jax.tree.map(sel, new_opt, opt_state)
+    return params, opt_state, assignments, centers, n_rep, n_swap
+
+
 #: fold_in tag deriving the churn Bernoulli key from the round's local
 #: sampling key — fold_in does not consume the split stream, so the
 #: no-churn key discipline (and with it bitwise parity) is untouched.
@@ -916,7 +1115,7 @@ _CHURN_KEY_TAG = 0x0C
 
 def swarm_round(state: SwarmState, data: SwarmData,
                 cfg: EngineConfig, method: MethodParams = None,
-                churn: ChurnParams = None):
+                churn: ChurnParams = None, hier: HierParams = None):
     """One full BSO-SL round as a pure function — local steps, eval,
     distribution upload, k-means, brain storm, Eq. 2 aggregation.
 
@@ -947,6 +1146,19 @@ def swarm_round(state: SwarmState, data: SwarmData,
     (:attr:`SwarmState.staleness`) increment, and participation resets
     them to 0. An all-ones mask (or ``dropout=0``) is bitwise the
     churn-free round — the parity anchor ``tests/test_churn.py`` pins.
+
+    ``hier`` (a STATIC :class:`HierParams`, or None) switches the
+    coordinator onto the two-tier path: per-pod local k-means over
+    member stats, a member-count-weighted global k-means + brain storm
+    over the O(pods * k_local) pod-cluster summaries, composed client
+    assignments ``g[pod * k_local + a_local]``, Eq. 2 unchanged. Plain
+    bso path only (the method/grid axes keep the flat coordinator —
+    their masks select *against* the flat assignments); composes with
+    ``churn`` (absent clients are masked out of their pod's k-means
+    and carry staleness-decayed Eq. 2 weight, as in the flat path).
+    ``hier=None`` is the flat path untouched and a single-pod
+    ``HierParams`` routes to the flat coordinator verbatim (see
+    :class:`HierParams`) — both bitwise, ``tests/test_hier.py`` pins.
     """
     model, opt = cfg.model, cfg.opt
     step = make_train_step(model, opt)
@@ -957,6 +1169,24 @@ def swarm_round(state: SwarmState, data: SwarmData,
     lr = cfg.lr if grid is None else grid.lr
     if churn is None and grid is not None:
         churn = grid.churn
+    if hier is not None:
+        if masks is not None:
+            raise ValueError(
+                "hier composes with the plain path only — the "
+                "method/grid axes mask against the flat coordinator's "
+                "assignments; run hierarchical rows as separate "
+                "run_rounds fits")
+        if cfg.aggregation != "bso":
+            raise ValueError(
+                f"hier needs cfg.aggregation='bso' (got "
+                f"{cfg.aggregation!r}) — fedavg/none have no "
+                "coordinator to shard")
+        if hier.n_pods == 1:
+            # one pod = the whole swarm: the pod-local clustering IS
+            # the global clustering, so the flat coordinator is the
+            # degenerate two-tier program — route to it verbatim
+            # (bitwise, pinned in tests/test_hier.py)
+            hier = None
 
     # --- churn axis: this round's participation mask + staleness
     N = data.train_n.shape[0]
@@ -1019,6 +1249,15 @@ def swarm_round(state: SwarmState, data: SwarmData,
         assignments = jnp.zeros((N,), jnp.int32)
         centers = jnp.zeros((0,), jnp.int32)
         n_rep = n_swap = zero
+    elif hier is not None:
+        if len(hier.pods[0]) + sum(len(p) for p in hier.pods[1:]) != N:
+            raise ValueError(
+                f"hier pods cover {sum(len(p) for p in hier.pods)} "
+                f"clients but the swarm has {N}")
+        (params, opt_state, assignments, centers, n_rep,
+         n_swap) = _hier_coordinate_and_aggregate(
+            params, opt_state, val, state.n_samples, cfg, hier,
+            k_kmeans, k_bso, present=present, eff_w=eff_w)
     else:
         if cfg.aggregation == "fedavg":
             k = 1
@@ -1065,14 +1304,16 @@ def swarm_round(state: SwarmState, data: SwarmData,
 
 def run_rounds(state: SwarmState, data: SwarmData, cfg: EngineConfig,
                rounds: int, method: MethodParams = None,
-               churn: ChurnParams = None):
+               churn: ChurnParams = None, hier: HierParams = None):
     """Scan :func:`swarm_round` over ``rounds``: the whole multi-round
     fit as ONE device program. Metrics gain a leading (rounds,) axis.
     ``method`` threads a :class:`MethodParams` (Table-II method axis)
     or :class:`GridPoint` (hyper-parameter grid row) through every
     round; ``churn`` (or the grid row's own churn) threads the
     scenario axis — a (rounds, N) explicit mask schedule is scanned
-    one row per round, everything else is closed over per round."""
+    one row per round, everything else is closed over per round.
+    ``hier`` (static) threads the two-tier coordinator topology
+    through every round (see :func:`swarm_round`)."""
     if churn is None and isinstance(method, GridPoint):
         churn = method.churn
     if churn is not None and churn.mask is not None \
@@ -1084,12 +1325,12 @@ def run_rounds(state: SwarmState, data: SwarmData, cfg: EngineConfig,
 
         def sched_body(s, mk):
             return swarm_round(s, data, cfg, method,
-                               churn._replace(mask=mk))
+                               churn._replace(mask=mk), hier)
 
         return jax.lax.scan(sched_body, state, churn.mask, length=rounds)
 
     def body(s, _):
-        return swarm_round(s, data, cfg, method, churn)
+        return swarm_round(s, data, cfg, method, churn, hier)
 
     return jax.lax.scan(body, state, None, length=rounds)
 
@@ -1264,9 +1505,10 @@ def _run_grid_scheduled(state: SwarmState, data, cfg: EngineConfig,
 # module-level jitted entry points: the cache is shared across every
 # host wrapper holding an equal EngineConfig (state buffers donated —
 # each round updates the swarm in place)
-jit_swarm_round = jax.jit(swarm_round, static_argnames=("cfg",),
+jit_swarm_round = jax.jit(swarm_round, static_argnames=("cfg", "hier"),
                           donate_argnums=(0,))
-jit_run_rounds = jax.jit(run_rounds, static_argnames=("cfg", "rounds"),
+jit_run_rounds = jax.jit(run_rounds,
+                         static_argnames=("cfg", "rounds", "hier"),
                          donate_argnums=(0,))
 jit_run_sweep = jax.jit(run_sweep, static_argnames=("cfg", "rounds"),
                         donate_argnums=(0,))
@@ -1292,10 +1534,38 @@ class FleetRoundOut(NamedTuple):
     train_loss: Any   # () mean loss of the last local step
 
 
+class HierRoundOut(NamedTuple):
+    """The per-round outputs of the HIERARCHICAL fleet surface.
+
+    The flat :class:`FleetRoundOut` is O(clients); this one is O(pods):
+    the round program runs each pod's local k-means on-mesh and only
+    the ``S = n_pods * k_local`` pod-cluster summaries cross to the
+    host (the two-tier coordinator's entire upload — ``BENCH_hier.json``
+    measures exactly these arrays' bytes). ``a_local`` is (N,) but is
+    NOT part of the upload: the driver feeds it back device-to-device
+    as the next round's ``a_prev`` operand without ever materialising
+    it on host.
+    """
+    centroids: Any    # (S, 2*#tensors) pod-cluster stat centroids
+    counts: Any       # (S,) reporting-member counts (the global tier's
+                      #   k-means weights)
+    wsums: Any        # (S,) summed member Eq. 2 weights
+    valsums: Any      # (S,) summed member val accuracies (mean = the
+                      #   score the global brain storm ranks)
+    a_local: Any      # (N,) int32 global pod-cluster index of each
+                      #   client (pod * k_local + local assignment) —
+                      #   device-resident feedback, never pulled
+    mean_val: Any     # () swarm-mean val accuracy (all clients) — the
+                      #   O(1) trajectory metric the driver logs
+    train_loss: Any   # () mean loss of the last local step
+
+
 def make_fleet_round(model: Model, opt: Optimizer, k: int,
                      n_local_steps: int = 1, *, use_pallas: bool = False,
                      with_eval: bool = False, with_loss: bool = False,
-                     axis_name: str = None, with_churn: bool = False):
+                     axis_name: str = None, with_churn: bool = False,
+                     hier_k_local: int = 0, hier_pods: int = 0,
+                     hier_kmeans_iters: int = 20):
     """Fleet round built from the same body as :func:`swarm_round`,
     reordered so a multi-round driver can close the coordinator loop
     with NO extra program: first Eq. 2 ``cluster_fedavg`` applies the
@@ -1356,6 +1626,38 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
     ``present`` masks this round's local phase (dropped pods run
     masked no-op steps). All-ones masks reproduce the churn-free body
     bitwise, so the driver uses one program for both regimes.
+
+    ``hier_k_local > 0`` selects the HIERARCHICAL surface instead (it
+    implies the in-program eval and is exclusive with
+    ``with_eval``/``with_loss``): the stat upload never leaves the
+    mesh — each pod runs a local ``k_local``-means over its members'
+    stats in-program and only the O(pods * k_local)
+    :class:`HierRoundOut` summaries cross to the host, which answers
+    with a (S,) pod-cluster -> global-cluster map ``g`` instead of a
+    (N,) client decision. The signature becomes::
+
+        round_step(sparams, sopt, batch, val, lr, g, use_composed,
+                   clusters0, a_prev, kmkey, weights[, present,
+                   agg_present, report]) -> (sparams, sopt,
+                                             HierRoundOut)
+
+    The incoming Eq. 2 decision is composed IN-PROGRAM:
+    ``where(use_composed, g[a_prev], clusters0)`` — ``a_prev`` is the
+    previous round's device-resident ``a_local`` feedback, ``clusters0``
+    a device-resident fallback (the driver feeds singletons, making
+    round 0's aggregation the bitwise identity exactly like the flat
+    driver), and ``use_composed`` a traced () bool that flips after
+    round 0 — so neither the O(N) fallback nor the assignments ever
+    cross the host boundary per round. ``kmkey`` seeds pod ``p``'s
+    k-means via ``fold_in(kmkey, p)`` (the pod index is
+    ``axis_index(axis_name)`` under shard_map, the static loop index on
+    the GSPMD path, where ``hier_pods`` must divide the client count
+    into equal contiguous pods). With ``with_churn`` a THIRD mask
+    ``report`` joins ``(present, agg_present)``: it masks the pod
+    k-means and the summary sums — a straggler trains but misses the
+    summary deadline, so the hier coordinator sees only fresh reports
+    (there is no per-client last-seen cache host-side; that cache is
+    O(clients), the very thing this surface removes).
     """
     step = make_train_step(model, opt)
 
@@ -1393,6 +1695,75 @@ def make_fleet_round(model: Model, opt: Optimizer, k: int,
                                             batch_for_step, present=present)
         stats = swarm_distribution_matrix(sparams, use_pallas=use_pallas)
         return sparams, sopt, stats, losses
+
+    if hier_k_local > 0:
+        if with_eval or with_loss:
+            raise ValueError("hier_k_local selects its own eval surface "
+                             "— drop with_eval/with_loss")
+        kl = int(hier_k_local)
+        client_eval = make_client_eval(model)
+
+        def _pod_summary(stats, val_acc, weights, report, key, pod_idx):
+            C, a = kmeans(key, stats, k=kl, iters=hier_kmeans_iters,
+                          mask=report)
+            w = (jnp.ones(stats.shape[:1], stats.dtype) if report is None
+                 else jnp.asarray(report, stats.dtype))
+            counts = jax.ops.segment_sum(w, a, kl)
+            wsums = jax.ops.segment_sum(weights * w, a, kl)
+            valsums = jax.ops.segment_sum(val_acc * w, a, kl)
+            pc = pod_idx * kl + a.astype(jnp.int32)
+            return C, counts, wsums, valsums, pc
+
+        def round_step_hier(sparams, sopt, batch, val, lr, g, use_comp,
+                            clusters0, a_prev, kmkey, weights,
+                            *churn_masks):
+            kw = {}
+            report = None
+            if with_churn:
+                present, agg_present, report = churn_masks
+                kw = {"present": present, "agg_present": agg_present}
+            # the incoming decision, composed on-mesh: round 0 rides the
+            # device-resident fallback (the driver feeds singletons — the
+            # bitwise-identity Eq. 2, exactly the flat driver's round 0)
+            clusters = jnp.where(use_comp, g[a_prev], clusters0)
+            sparams, sopt, stats, losses = body(
+                sparams, sopt, batch, lr, clusters, weights, **kw)
+            val_acc = client_eval(sparams, val)
+            loss = losses[-1]
+            mean_val = jnp.mean(val_acc)
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+                mean_val = jax.lax.pmean(mean_val, axis_name)
+                pod = jax.lax.axis_index(axis_name)
+                C, counts, wsums, valsums, pc = _pod_summary(
+                    stats, val_acc, weights, report,
+                    jax.random.fold_in(kmkey, pod), pod)
+            else:
+                n_loc = stats.shape[0]
+                P = int(hier_pods)
+                if P <= 0 or n_loc % P:
+                    raise ValueError(
+                        "the GSPMD hier surface needs hier_pods to "
+                        f"divide the client count into equal contiguous "
+                        f"pods (hier_pods={P}, clients={n_loc})")
+                m = n_loc // P
+                outs = []
+                for p in range(P):
+                    sl = slice(p * m, (p + 1) * m)
+                    outs.append(_pod_summary(
+                        stats[sl], val_acc[sl], weights[sl],
+                        None if report is None else report[sl],
+                        jax.random.fold_in(kmkey, p), p))
+                C = jnp.concatenate([o[0] for o in outs], axis=0)
+                counts = jnp.concatenate([o[1] for o in outs])
+                wsums = jnp.concatenate([o[2] for o in outs])
+                valsums = jnp.concatenate([o[3] for o in outs])
+                pc = jnp.concatenate([o[4] for o in outs])
+            return sparams, sopt, HierRoundOut(
+                centroids=C, counts=counts, wsums=wsums, valsums=valsums,
+                a_local=pc, mean_val=mean_val, train_loss=loss)
+
+        return round_step_hier
 
     if with_eval:
         client_eval = make_client_eval(model)

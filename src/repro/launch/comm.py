@@ -133,3 +133,100 @@ def fleet_round_comm(compiled, params_abs, n_clients: int,
         "coord_reduction_x": full / max(up, 1),
         "cost_analysis": cost,
     }
+
+
+def hier_host_bytes(params_abs, n_clients: int, n_pods: int,
+                    k_local: int) -> dict:
+    """The analytical host-facing ledger of ONE two-tier round, and the
+    flat O(clients) round it replaces — pure arithmetic on the abstract
+    params, no compiled program required (the extrapolation half of the
+    ``BENCH_hier.json`` scaling claim; :func:`hier_round_comm` attaches
+    the same numbers to a measured round).
+
+    Upload (device -> host), per round:
+
+    * flat: every client sends its (2*#tensors,) stat row plus a f32
+      val score — ``N * (up + 4)``.
+    * hier: only the ``S = n_pods * k_local`` pod-cluster summaries
+      cross — per row the centroid (``up`` bytes) plus three f32
+      scalars (count, weight sum, val sum) — ``S * (up + 12)`` (plus
+      two O(1) scalars, mean val + loss, counted separately).
+
+    Feedback (host -> device), per round:
+
+    * flat: the (N,) int32 cluster decision + (N,) f32 Eq. 2 weights.
+    * hier: the (S,) int32 pod-cluster -> global-cluster map ``g`` plus
+      the O(1) ``use_composed`` flag and the 8-byte k-means key — the
+      (N,) fallback/feedback arrays live on-device and never move.
+    """
+    up = upload_bytes(params_abs)
+    S = n_pods * k_local
+    return {
+        "n_clients": n_clients,
+        "n_pods": n_pods,
+        "k_local": k_local,
+        "summary_rows": S,
+        "flat_upload_bytes": n_clients * (up + 4),
+        "flat_feedback_bytes": n_clients * (4 + 4),
+        "summary_upload_bytes": S * (up + 12),
+        "scalar_upload_bytes": 8,
+        "hier_feedback_bytes": S * 4 + 9,
+        "hier_reduction_x": (n_clients * (up + 4))
+        / max(S * (up + 12), 1),
+    }
+
+
+def hier_round_comm(compiled, params_abs, n_clients: int, *, n_pods: int,
+                    k_local: int, batch_bytes: int = 0) -> dict:
+    """Per-round ledger of ONE compiled HIERARCHICAL fleet round step —
+    the two-tier counterpart of :func:`fleet_round_comm`.
+
+    Host-facing traffic is the :func:`hier_host_bytes` arithmetic (the
+    O(pods) summaries up, the (S,) map ``g`` down); the on-mesh Eq. 2
+    exchange, the §I baselines and XLA's cost analysis are measured the
+    same way as the flat ledger. The pod-local k-means adds NO host
+    traffic at all — it runs inside the round program; its cost shows
+    up only in ``cost_analysis``/``eq2_collective_bytes``.
+    """
+    full = full_params_bytes(params_abs)
+    try:
+        hlo = compiled.as_text()
+    except Exception:  # backend without HLO text dumps
+        hlo = ""
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        cost = {k: float(ca[k]) for k in ("flops", "bytes accessed")
+                if k in ca}
+    except Exception:
+        pass
+    out = hier_host_bytes(params_abs, n_clients, n_pods, k_local)
+    out.update({
+        "batch_upload_bytes": int(batch_bytes),
+        "eq2_collective_bytes": collective_bytes(hlo),
+        "eq2_p2p_bound_bytes": 2 * n_clients * full,
+        "fedavg_bytes": 2 * n_clients * full,
+        "blockchain_bytes": n_clients * (n_clients - 1) * full,
+        "full_params_bytes": full,
+        "cost_analysis": cost,
+    })
+    return out
+
+
+def hier_scaling_table(params_abs, *, pod_size: int, k_local: int,
+                       n_clients=(10_000, 100_000, 1_000_000)) -> list:
+    """Analytical extrapolation of the per-round host-facing bytes to
+    swarm sizes no host could serve flat — one :func:`hier_host_bytes`
+    row per N at fixed pod size (so pods grow with N and the hier curve
+    stays O(N / pod_size) while flat is O(N)). This is the ledger the
+    measured small-N slope in ``benchmarks/hier_bench.py`` is checked
+    against."""
+    rows = []
+    for n in n_clients:
+        n = int(n)
+        pods = -(-n // pod_size)
+        row = hier_host_bytes(params_abs, n, pods, k_local)
+        row["pod_size"] = pod_size
+        rows.append(row)
+    return rows

@@ -58,7 +58,7 @@ from repro.core.bso import brain_storm
 from repro.core.engine import make_batch, make_client_eval, stack_eval_split
 from repro.core.kmeans import kmeans
 from repro.data.dr import bucket_clients, make_dr_swarm_data, scale_table
-from repro.launch.comm import fleet_round_comm
+from repro.launch.comm import fleet_round_comm, hier_round_comm
 from repro.launch.mesh import make_fleet_mesh
 from repro.launch.swarm_fleet import fleet_setup, force_host_device_count
 from repro.models import build_model
@@ -93,6 +93,45 @@ def host_coordinator(stats, val_acc, *, k: int, p1: float, p2: float,
                         iters=kmeans_iters)
     rng = np.random.default_rng([seed, round_idx])
     plan = brain_storm(rng, np.asarray(a0), np.asarray(val_acc), k, p1, p2)
+    return (plan.assignments.astype(np.int32),
+            plan.centers.astype(np.int32), plan.events)
+
+
+def _hier_val_means(counts, valsums):
+    """Per-summary-row mean val accuracy; empty rows (a pod-cluster that
+    captured no reporting clients) get -1.0 — inert under the BSA's
+    best-score ranking, never a center."""
+    counts = np.asarray(counts, np.float32)
+    return np.where(counts > 0,
+                    np.asarray(valsums, np.float32)
+                    / np.maximum(counts, np.float32(1e-9)),
+                    np.float32(-1.0)).astype(np.float32)
+
+
+def host_hier_coordinator(centroids, counts, valsums, *, k: int, p1: float,
+                          p2: float, kmeans_iters: int = 20, seed: int = 0,
+                          round_idx: int = 0):
+    """The two-tier coordinator's global tier — O(pods), not O(clients).
+
+    Mirrors :func:`host_coordinator` (same per-round key/rng streams, so
+    a round replays bit-for-bit from its pulled summaries) but consumes
+    the ``S = pods * k_local`` pod-cluster summaries of
+    :class:`~repro.core.engine.HierRoundOut` instead of per-client rows:
+    WEIGHTED k-means over the pod centroids (weights = reporting-member
+    counts, so an empty summary row anchors nothing) and the numpy
+    ``brain_storm`` over the per-row mean val scores (empty rows -1.0,
+    inert). Returns ``(g, centers, events)`` — the (S,) pod-cluster ->
+    global-cluster map the round program composes in-program via
+    ``g[a_local]``, and the (k,) center *summary-row* ids (not client
+    ids — the host never sees clients on this surface).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), round_idx)
+    w = jnp.asarray(counts, jnp.float32)
+    _, a0 = _jit_kmeans(key, jnp.asarray(centroids, jnp.float32), k=k,
+                        iters=kmeans_iters, weights=w)
+    rng = np.random.default_rng([seed, round_idx])
+    plan = brain_storm(rng, np.asarray(a0), _hier_val_means(counts, valsums),
+                       k, p1, p2)
     return (plan.assignments.astype(np.int32),
             plan.centers.astype(np.int32), plan.events)
 
@@ -186,6 +225,12 @@ class FleetRoundLog:
     coordinated: bool = True           # False on a quorum miss (decision
     #                                    re-applied, not recomputed)
     sim_delay_s: float = 0.0           # straggler-delay model, simulated
+    # hier-regime fields: on the two-tier surface `stats` holds the
+    # (S, 2*#tensors) pod-cluster centroids, `val_acc`/`assignments`/
+    # `centers` are per summary ROW (S = pods * k_local), and these two
+    # complete the pulled upload (the coordinator replay inputs)
+    counts: Optional[np.ndarray] = None     # (S,) reporting-member counts
+    valsums: Optional[np.ndarray] = None    # (S,) summed member val accs
 
 
 @dataclass
@@ -277,6 +322,7 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
               eval_buckets: int = 0, bucket_strategy: str = "pow2",
               ckpt_path=None, ckpt_every: int = 0,
               faults: Optional[FleetFaults] = None,
+              hier_k_local: int = 0,
               verbose: bool = False) -> FleetRunResult:
     """Drive ``rounds`` full BSO-SL rounds on ``mesh`` with exactly ONE
     compiled fleet-round executable.
@@ -311,19 +357,55 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
     engine's churn semantics shifted by the pending-aggregation offset.
     An all-knobs-off ``FleetFaults()`` (or ``None``) keeps the
     churn-free program.
+
+    ``hier_k_local > 0`` switches the driver onto the HIERARCHICAL
+    two-tier regime (exclusive with ``eval_buckets`` — the hier round
+    carries its own in-program eval): each mesh pod runs a local
+    ``hier_k_local``-means over its clients' stats in-program, the
+    driver pulls ONLY the O(pods * k_local)
+    :class:`~repro.core.engine.HierRoundOut` summaries, and
+    :func:`host_hier_coordinator` answers with the (S,) pod-cluster ->
+    global-cluster map ``g`` that the next round composes on-mesh via
+    ``g[a_local]`` (``a_local`` is fed back device-to-device, never
+    pulled until a checkpoint export). Host traffic and host compute
+    become O(pods), not O(clients) — the scaling claim
+    ``BENCH_hier.json`` measures. Under ``faults`` the straggler
+    exclusion moves IN-PROGRAM (a third ``report`` mask gates the pod
+    k-means and summary sums); there is no host-side last-seen report
+    cache — that cache is O(clients), the very thing this regime
+    removes — so a straggler's stats simply sit out the round instead
+    of being replayed stale (documented semantic difference from the
+    flat churn regime).
     """
     N = len(clients_data)
     if n_clusters > N:
         raise ValueError(f"n_clusters={n_clusters} > n_clients={N}")
+    hier = hier_k_local > 0
     bucketed = eval_buckets > 0
+    if hier and bucketed:
+        raise ValueError("hier_k_local and eval_buckets are exclusive "
+                         "driver regimes (the hier round carries its own "
+                         "in-program eval)")
+    n_pods = int(mesh.shape["pod"]) if hier else 0
+    S = n_pods * hier_k_local
+    if hier and n_clusters > S:
+        raise ValueError(
+            f"n_clusters={n_clusters} > pods*k_local={S}: the global tier "
+            "clusters the summary rows — raise hier_k_local or use more "
+            "pods")
     churn = faults is not None and faults.active
     program = fleet_setup(model, opt, mesh, k=N, n_local_steps=local_steps,
                           use_pallas_stats=use_pallas_stats,
-                          with_eval=not bucketed, with_loss=bucketed,
+                          with_eval=not bucketed and not hier,
+                          with_loss=bucketed,
                           donate=True, spmd="shard_map",
-                          with_churn=churn)
-    in_sh = program.in_shardings[:-2] if churn else program.in_shardings
-    if bucketed:
+                          with_churn=churn, hier_k_local=hier_k_local)
+    n_masks = (3 if hier else 2) if churn else 0
+    in_sh = (program.in_shardings[:-n_masks] if n_masks
+             else program.in_shardings)
+    if hier:
+        _, _, bsh, vsh, lsh, gsh, ush, csh, ash, kmsh, wsh = in_sh
+    elif bucketed:
         _, _, bsh, lsh, csh, wsh = in_sh
     else:
         _, _, bsh, vsh, lsh, csh, wsh = in_sh
@@ -364,11 +446,19 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                             np.float32)
         weights = jax.device_put(base_w, wsh)
         clusters = np.asarray(singleton_assignments(N))
+        if hier:
+            # device-resident coordinator plumbing: the O(N) singleton
+            # fallback and the assignment feedback never cross the host
+            # boundary — only the (S,) decision g rides back per round
+            clusters0_dev = jax.device_put(clusters.astype(np.int32), csh)
+            a_prev = jax.device_put(np.zeros(N, np.int32), ash)
+            g = np.zeros(S, np.int32)
 
         # churn-regime host state: staleness counters (rounds since last
         # participation), the previous round's presence (the pending
         # Eq. 2's receive mask — all-ones before round 0), and the
-        # coordinator's last-seen report cache for stragglers
+        # coordinator's last-seen report cache for stragglers (flat
+        # regime only — the hier surface excludes stragglers in-program)
         staleness = np.zeros(N, np.int32)
         prev_present = np.ones(N, bool)
         have_cache = np.zeros(N, bool)
@@ -392,9 +482,18 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
         batch0 = put_batch(0)
         mask_ops = ()
         if churn:
-            mask_ops = (jax.device_put(np.ones(N, bool), msh),
-                        jax.device_put(np.ones(N, bool), msh))
-        if bucketed:
+            ones = jax.device_put(np.ones(N, bool), msh)
+            mask_ops = (ones,) * n_masks
+        if hier:
+            lowered = program.jit_fn.lower(
+                sparams, sopt, batch0, val, lr_arr,
+                jax.device_put(g, gsh), jax.device_put(jnp.asarray(False),
+                                                       ush),
+                clusters0_dev, a_prev,
+                jax.device_put(jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                  0), kmsh),
+                weights, *mask_ops)
+        elif bucketed:
             lowered = program.jit_fn.lower(
                 sparams, sopt, batch0, lr_arr,
                 jax.device_put(clusters, csh), weights, *mask_ops)
@@ -407,8 +506,13 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
         batch_bytes = sum(x.size * x.dtype.itemsize
                           for x in jax.tree.leaves(batch0))
         params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-        comm = fleet_round_comm(compiled, params_abs, N,
-                                batch_bytes=batch_bytes)
+        if hier:
+            comm = hier_round_comm(compiled, params_abs, N, n_pods=n_pods,
+                                   k_local=hier_k_local,
+                                   batch_bytes=batch_bytes)
+        else:
+            comm = fleet_round_comm(compiled, params_abs, N,
+                                    batch_bytes=batch_bytes)
 
         history = []
         for r in range(rounds):
@@ -417,7 +521,7 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
             # deterministic per (seed, r)) so every round's wall_s covers
             # the same work: sample + upload + round step + stat pull
             batch = put_batch(r)
-            applied = clusters
+            applied = g.copy() if hier else clusters
             extra = ()
             present = straggler = reported = None
             if churn:
@@ -429,7 +533,30 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                 weights = jax.device_put(eff_weights(), wsh)
                 extra = (jax.device_put(present, msh),
                          jax.device_put(prev_present, msh))
-            if bucketed:
+                if hier:
+                    # third mask: stragglers train but miss the summary
+                    # deadline — excluded from the pod k-means in-program
+                    extra = extra + (jax.device_put(reported, msh),)
+            if hier:
+                sparams, sopt, out = compiled(
+                    sparams, sopt, batch, val, lr_arr,
+                    jax.device_put(g, gsh),
+                    jax.device_put(jnp.asarray(r > 0), ush),
+                    clusters0_dev, a_prev,
+                    jax.device_put(
+                        jax.random.fold_in(jax.random.PRNGKey(seed), r),
+                        kmsh),
+                    weights, *extra)
+                # the ONLY device->host pull: the O(pods) summaries —
+                # a_local stays on-mesh as next round's a_prev operand
+                stats = np.asarray(out.centroids)
+                counts = np.asarray(out.counts)
+                valsums = np.asarray(out.valsums)
+                val_acc = _hier_val_means(counts, valsums)
+                train_loss = float(out.train_loss)
+                hier_mean_val = float(out.mean_val)
+                a_prev = out.a_local
+            elif bucketed:
                 sparams, sopt, stats_dev, loss_dev = compiled(
                     sparams, sopt, batch, lr_arr,
                     jax.device_put(applied, csh), weights, *extra)
@@ -457,6 +584,19 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                 staleness = np.where(present, 0, staleness + 1) \
                     .astype(np.int32)
                 prev_present = present
+                n_rep = int(reported.sum())
+            if hier:
+                if churn and faults.quorum and n_rep < faults.quorum:
+                    coordinated = False
+                    events = [f"quorum miss: {n_rep}/{N} reported "
+                              f"< Q={faults.quorum}; previous pod-cluster "
+                              "map re-applied"]
+                else:
+                    g, centers, events = host_hier_coordinator(
+                        stats, counts, valsums, k=n_clusters, p1=p1,
+                        p2=p2, kmeans_iters=kmeans_iters, seed=seed,
+                        round_idx=r)
+            elif churn:
                 # the coordinator sees fresh reports only from clients
                 # that met the deadline; stragglers/dropped fall back to
                 # their last-seen report (a dropped client's params are
@@ -473,7 +613,6 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                 last_stats[reported] = stats[reported]
                 last_val[reported] = val_acc[reported]
                 have_cache |= reported
-                n_rep = int(reported.sum())
                 if faults.quorum and n_rep < faults.quorum:
                     # quorum miss: re-apply the previous decision (round
                     # 0's singleton fallback included) — deterministic,
@@ -493,40 +632,54 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                     kmeans_iters=kmeans_iters, seed=seed, round_idx=r)
             t2 = time.perf_counter()
             log = FleetRoundLog(
-                round=r, mean_val_acc=float(val_acc.mean()),
+                round=r,
+                mean_val_acc=hier_mean_val if hier
+                else float(val_acc.mean()),
                 val_acc=val_acc, train_loss=train_loss,
-                stats=stats, assignments=clusters, centers=centers,
+                stats=stats,
+                assignments=g.copy() if hier else clusters,
+                centers=centers,
                 applied_clusters=applied, events=list(events),
                 wall_s=t1 - t0, coord_s=t2 - t1,
                 present=present, reported=reported,
                 staleness=staleness.copy() if churn else None,
                 coordinated=coordinated,
                 sim_delay_s=float(faults.delay_s) if churn
-                and bool(straggler.any()) else 0.0)
+                and bool(straggler.any()) else 0.0,
+                counts=counts if hier else None,
+                valsums=valsums if hier else None)
             history.append(log)
             if ckpt_path and ckpt_every and (r + 1) % ckpt_every == 0:
                 # when ckpt_every divides rounds, the _r{rounds} export
                 # is bitwise the final export below — same params, same
-                # decision, same (effective) weights
+                # decision, same (effective) weights. A hier export is
+                # the ONE place the (N,) assignments are materialised on
+                # host: compose g[a_local] from the device feedback.
                 export_fleet_checkpoint(
-                    f"{ckpt_path}_r{r + 1}", model, sparams, clusters,
+                    f"{ckpt_path}_r{r + 1}", model, sparams,
+                    g[np.asarray(a_prev)] if hier else clusters,
                     eff_weights() if churn else base_w, round_idx=r,
                     n_clusters=n_clusters, mean_val_acc=log.mean_val_acc,
                     present=present if churn else None)
             if verbose:
                 flag = "" if coordinated else " [quorum miss]"
+                decision = g if hier else clusters
                 print(f"[fleet] round {r}: val_acc={log.mean_val_acc:.3f} "
                       f"loss={log.train_loss:.3f} "
-                      f"clusters={np.bincount(clusters, minlength=n_clusters)}"
+                      f"clusters={np.bincount(decision, minlength=n_clusters)}"
                       f" events={len(events)} wall={log.wall_s:.2f}s{flag}")
 
     if ckpt_path:
         if history:
             # final export: fold in the pending Eq. 2 (see module
             # docstring) — under churn, the masked variant with the
-            # staleness-decayed weights the next round would apply
+            # staleness-decayed weights the next round would apply. On
+            # the hier surface the (N,) decision is composed here from
+            # the device-resident feedback (the one a_local pull).
             export_fleet_checkpoint(
-                ckpt_path, model, sparams, history[-1].assignments,
+                ckpt_path, model, sparams,
+                g[np.asarray(a_prev)] if hier
+                else history[-1].assignments,
                 eff_weights() if churn else base_w, round_idx=rounds - 1,
                 n_clusters=n_clusters,
                 mean_val_acc=history[-1].mean_val_acc,
@@ -547,6 +700,9 @@ def run_fleet(model, opt, mesh, clients_data, *, rounds: int,
                 p2=p2, seed=seed, mesh_shape=dict(mesh.shape),
                 n_devices=mesh.size,
                 eval_buckets=len(eval_progs) if bucketed else 0,
+                hier=None if not hier else {
+                    "k_local": hier_k_local, "n_pods": n_pods,
+                    "summary_rows": S},
                 faults=None if faults is None else {
                     "drop_rate": faults.drop_rate,
                     "straggler_rate": faults.straggler_rate,
@@ -600,6 +756,10 @@ def main():
     ap.add_argument("--quorum", type=int, default=0,
                     help="coordinator quorum Q: recompute clusters only "
                          "when >= Q clients report (0 = always)")
+    ap.add_argument("--hier-k", type=int, default=0,
+                    help="per-pod local k-means cluster count: > 0 "
+                         "switches onto the two-tier O(pods) coordinator "
+                         "(0 = flat O(clients))")
     args = ap.parse_args()
     if args.devices:
         force_host_device_count(args.devices)
@@ -618,15 +778,22 @@ def main():
                     eval_buckets=args.eval_buckets,
                     ckpt_path=args.ckpt, ckpt_every=args.ckpt_every,
                     faults=faults if faults.active else None,
+                    hier_k_local=args.hier_k,
                     verbose=True)
     if args.ckpt:
         print(f"[fleet] checkpoint -> {args.ckpt}.npz")
-    up = res.comm["stat_upload_bytes"]
     coll = res.comm["eq2_collective_bytes"]["total"]
+    if args.hier_k:
+        up = res.comm["summary_upload_bytes"]
+        what = (f"summary upload {up} B "
+                f"({res.comm['summary_rows']} rows) to host")
+    else:
+        up = res.comm["stat_upload_bytes"]
+        what = f"stat upload {up} B to host"
     print(f"[fleet] {res.meta['n_clients']} clients on "
           f"{res.meta['n_devices']} devices, {args.rounds} rounds, "
           f"{res.n_compiles} compile ({res.compile_s:.1f}s); per round: "
-          f"stat upload {up} B to host, Eq.2 collectives {coll} B/device")
+          f"{what}, Eq.2 collectives {coll} B/device")
 
 
 if __name__ == "__main__":

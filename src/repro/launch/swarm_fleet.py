@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig
-from repro.core.engine import FleetRoundOut, make_fleet_round
+from repro.core.engine import FleetRoundOut, HierRoundOut, make_fleet_round
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
@@ -72,7 +72,9 @@ class FleetProgram(NamedTuple):
 def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                 use_pallas_stats: bool = False, with_eval: bool = False,
                 with_loss: bool = False, donate: bool = False,
-                spmd: str = "auto", with_churn: bool = False) -> FleetProgram:
+                spmd: str = "auto", with_churn: bool = False,
+                hier_k_local: int = 0,
+                hier_kmeans_iters: int = 20) -> FleetProgram:
     """ONE setup path for the fleet round on a ``pod``-axis mesh —
     the dry-run lowering (:func:`lower_fleet_round`) and the end-to-end
     driver (``repro.launch.fleet_driver``) both build their program
@@ -109,6 +111,21 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
     quorum/staleness regime feeds them per round, and all-ones masks
     reproduce the churn-free program bitwise.
 
+    ``hier_k_local > 0`` selects the HIERARCHICAL round surface
+    (``engine.make_fleet_round(hier_k_local=...)``, exclusive with
+    ``with_eval``/``with_loss``): pod-local k-means runs on-mesh and
+    only the O(pods * k_local) :class:`~repro.core.engine.HierRoundOut`
+    summaries face the host. On the shard_map path each mesh shard is
+    one pod (pod index = ``axis_index("pod")``); on the GSPMD path the
+    client axis is split into ``mesh.shape["pod"]`` equal contiguous
+    pods. The per-round host traffic drops from O(clients) stats to
+    O(pods) summaries in both directions (the decision comes back as
+    the (pods * k_local,) map ``g``; the (N,) fallback ``clusters0``
+    and the assignment feedback ``a_prev``/``a_local`` stay
+    device-resident) — the scaling claim ``BENCH_hier.json`` measures.
+    ``with_churn`` here appends THREE masks ``(present, agg_present,
+    report)`` — see the engine docstring for the straggler semantics.
+
     The coordinator inputs (``clusters``, ``weights``) ride the client
     axis and the stat upload comes back sharded over ``pod``.
     ``donate=True`` donates the params/opt buffers (the driver's round
@@ -128,6 +145,10 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
     if with_eval and with_loss:
         raise ValueError("with_eval and with_loss are exclusive round "
                          "surfaces")
+    hier = hier_k_local > 0
+    if hier and (with_eval or with_loss):
+        raise ValueError("hier_k_local selects its own eval surface — "
+                         "drop with_eval/with_loss")
     if spmd == "shard_map":
         from jax.experimental.shard_map import shard_map
         from repro.sharding import use_sharding
@@ -136,7 +157,9 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                                       with_eval=with_eval,
                                       with_loss=with_loss,
                                       axis_name="pod",
-                                      with_churn=with_churn)
+                                      with_churn=with_churn,
+                                      hier_k_local=hier_k_local,
+                                      hier_kmeans_iters=hier_kmeans_iters)
 
         def local_step(*args):
             # every mesh axis is manual inside the shard_map body, so
@@ -148,7 +171,17 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                 return inner_step(*args)
 
         pod = P("pod")
-        if with_eval:
+        if hier:
+            # (params, opt, batch, val, lr, g, use_composed, clusters0,
+            #  a_prev, kmkey, weights) — g/use_composed/kmkey replicated
+            # (the O(pods) decision), the fallback + assignment feedback
+            # device-resident on the client axis
+            in_specs = (pod, pod, pod, pod, P(), P(), P(), pod, pod,
+                        P(), pod)
+            out_specs = (pod, pod, HierRoundOut(
+                centroids=pod, counts=pod, wsums=pod, valsums=pod,
+                a_local=pod, mean_val=P(), train_loss=P()))
+        elif with_eval:
             in_specs = (pod, pod, pod, pod, P(), pod, pod)
             out_specs = (pod, pod, FleetRoundOut(stats=pod, val_acc=pod,
                                                  train_loss=P()))
@@ -159,7 +192,9 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
             in_specs = (pod, pod, pod, P(), pod, pod)
             out_specs = (pod, pod, pod)
         if with_churn:
-            in_specs = in_specs + (pod, pod)    # present, agg_present
+            # present, agg_present (+ report on the hier surface)
+            in_specs = in_specs + ((pod, pod, pod) if hier
+                                   else (pod, pod))
         # check_rep off: several conv/reduce-window primitives lack
         # replication rules in this jax version
         round_step = shard_map(local_step, mesh=mesh, in_specs=in_specs,
@@ -188,8 +223,20 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
                                       use_pallas=use_pallas_stats,
                                       with_eval=with_eval,
                                       with_loss=with_loss,
-                                      with_churn=with_churn)
-        if with_eval:
+                                      with_churn=with_churn,
+                                      hier_k_local=hier_k_local,
+                                      hier_pods=mesh.shape["pod"],
+                                      hier_kmeans_iters=hier_kmeans_iters)
+        if hier:
+            # (params, opt, batch, val, lr, g, use_composed, clusters0,
+            #  a_prev, kmkey, weights): client-axis operands sharded,
+            # the O(pods) decision + summaries replicated
+            in_sh = (psh, osh, bsh, ssh, None, rep, rep, ssh, ssh,
+                     rep, rep)
+            out_sh = (psh, osh, HierRoundOut(
+                centroids=rep, counts=rep, wsums=rep, valsums=rep,
+                a_local=ssh, mean_val=rep, train_loss=rep))
+        elif with_eval:
             in_sh = (psh, osh, bsh, ssh, None, rep, rep)
             out_sh = (psh, osh, FleetRoundOut(stats=ssh, val_acc=ssh,
                                               train_loss=rep))
@@ -200,7 +247,8 @@ def fleet_setup(model, opt, mesh, *, k: int, n_local_steps: int = 1,
             in_sh = (psh, osh, bsh, None, rep, rep)
             out_sh = (psh, osh, ssh)
         if with_churn:
-            in_sh = in_sh + (rep, rep)          # present, agg_present
+            # present, agg_present (+ report on the hier surface)
+            in_sh = in_sh + ((rep, rep, rep) if hier else (rep, rep))
     jit_fn = jax.jit(round_step, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=(0, 1) if donate else ())
     return FleetProgram(jit_fn=jit_fn, rules=rules, in_shardings=in_sh,

@@ -4,4 +4,29 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (extra seeds of the statistical "
+             "parity tests — the nightly tier; tier-1 runs one seed)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: extra-seed replicas of statistical tests; skipped unless "
+        "--runslow (nightly) — tier-1 keeps one pinned seed per test")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="needs --runslow (nightly tier)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

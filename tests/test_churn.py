@@ -38,8 +38,7 @@ from repro.core.engine import (EngineConfig, churn_params, grid_axes,
 from repro.core.kmeans import kmeans, lloyd_step
 from repro.data.dr import TABLE_I, make_dr_swarm_data
 from repro.launch.fleet_driver import (FleetFaults, draw_faults,
-                                       host_coordinator, make_unit_fleet,
-                                       run_fleet)
+                                       host_coordinator, run_fleet)
 from repro.launch.mesh import make_fleet_mesh
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
@@ -301,9 +300,40 @@ def test_churn_validation_errors(dr_clients, dr_model):
                             [{"dropout": 0.0}, {"dropout": 0.3}])
     keys = jax.random.split(jax.random.PRNGKey(0), 2)
     states = make_grid_state(dr_model, cfg.opt, dr_clients, keys)
-    with pytest.raises(ValueError):
+    # the message must stay actionable: name the unsupported combination
+    # AND the remedy (schedule=None → the masked path)
+    with pytest.raises(ValueError,
+                       match="sorted local-steps schedule does not support "
+                             "churn rows"):
         run_grid(states, data, cfg, grid, 2,
                  schedule=((0, 1), jnp.asarray([2, 2])))
+    with pytest.raises(ValueError, match="pass schedule=None"):
+        run_grid(states, data, cfg, grid, 2, schedule=(2, 2))
+
+
+def test_dropout0_grid_row_bitwise_matches_churnfree_fit(dr_clients,
+                                                         dr_model):
+    """Post-hier regression guard composing the two pinned contracts —
+    grid row g == serial ``run_rounds`` with the same key, and
+    dropout=0 churn == churn-free — end to end: the dropout=0 row of a
+    churn grid reproduces the plain churn-free ``jit_run_rounds`` fit
+    BITWISE (params, losses, accuracies)."""
+    cfg = _cfg(dr_model)
+    data = make_swarm_data(dr_model.cfg, dr_clients)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    states = make_grid_state(dr_model, cfg.opt, dr_clients, keys)
+    grid = make_grid_config(cfg, N_CLIENTS,
+                            [{"dropout": 0.0}, {"dropout": 0.3}])
+    gs, gm = jit_run_grid(states, data, cfg, grid, 2)
+
+    state0 = make_swarm_state(dr_model, cfg.opt, dr_clients, keys[0])
+    s0, m0 = jit_run_rounds(state0, data, cfg, 2)
+    _params_equal(jax.tree.map(lambda x: x[0], gs.params), s0.params)
+    np.testing.assert_array_equal(np.asarray(gm.train_loss)[0],
+                                  np.asarray(m0.train_loss))
+    np.testing.assert_array_equal(np.asarray(gm.mean_val_acc)[0],
+                                  np.asarray(m0.mean_val_acc))
+    assert np.asarray(gm.present)[0].all()
 
 
 # ---------------------------------------------------------- fleet regime

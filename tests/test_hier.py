@@ -1,0 +1,358 @@
+"""Hierarchical two-tier coordination tests (PR 9).
+
+Pins the acceptance seams of the O(pods) coordinator:
+
+* weighted/centroid-input k-means — ``weights=None`` bitwise, the
+  duplication oracle, zero-weight rows barred from seeding,
+* engine path — ``pods == 1`` routes to the flat coordinator BITWISE,
+  a hier fit is ONE ``jit_run_rounds`` program, the dropout=0 churn
+  composition is bitwise the churn-free hier fit, hier-vs-flat val
+  trajectories agree at small N, and the validation errors are
+  actionable,
+* fleet path — the driver pulls only O(pods * k_local) summaries with
+  exactly ONE compiled round step, composes with ``FleetFaults``
+  (quorum re-applies the previous pod-cluster map), and the GSPMD
+  surface matches shard_map on the trivial mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig
+from repro.core.engine import (EngineConfig, churn_params, hier_params,
+                               jit_run_rounds, make_swarm_data,
+                               make_swarm_state, method_params)
+from repro.core.kmeans import kmeans, kmeans_pp_init, lloyd_step
+from repro.data.dr import TABLE_I, make_dr_swarm_data
+from repro.launch.fleet_driver import (FleetFaults, host_hier_coordinator,
+                                       run_fleet)
+from repro.launch.mesh import make_fleet_mesh
+from repro.launch.swarm_fleet import fleet_setup
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+from repro.sharding import use_sharding
+
+N_CLIENTS = 14
+SMALL_TABLE = np.maximum(TABLE_I // 16,
+                         (TABLE_I > 0).astype(np.int64) * 2)[:, :N_CLIENTS]
+
+
+@pytest.fixture(scope="module")
+def dr_clients():
+    return make_dr_swarm_data(image_size=16, seed=0, table=SMALL_TABLE)
+
+
+@pytest.fixture(scope="module")
+def dr_model():
+    return build_model(get_config("squeezenet-dr"))
+
+
+def _pieces(model, clients, *, local_steps=2, key=0):
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=2e-3))
+    cfg = EngineConfig(model=model, opt=opt, local_steps=local_steps,
+                       batch_size=8, lr=2e-3, aggregation="bso",
+                       n_clusters=3, p1=0.9, p2=0.8, kmeans_iters=10)
+    data = make_swarm_data(model.cfg, clients)
+    state = make_swarm_state(model, opt, clients, jax.random.PRNGKey(key))
+    return state, data, cfg
+
+
+def _tree_equal(a, b):
+    return all(bool(np.array_equal(np.asarray(x), np.asarray(y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------------- weighted k-means
+
+
+def test_kmeans_unit_weights_bitwise_unweighted():
+    """weights=ones is the unweighted run bit-for-bit: the first-seed
+    remap is the identity, ``d * 1.0`` is exact, and the 1e-9
+    denominator floor only differs on empty clusters, whose means the
+    reseed overwrites either way."""
+    key = jax.random.PRNGKey(3)
+    X = jax.random.normal(jax.random.PRNGKey(7), (40, 6))
+    C0, a0 = kmeans(key, X, k=4, iters=8)
+    C1, a1 = kmeans(key, X, k=4, iters=8, weights=jnp.ones(40))
+    np.testing.assert_array_equal(np.asarray(C0), np.asarray(C1))
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+
+
+def test_lloyd_step_weighted_matches_duplication_oracle():
+    """Integer weights == physically duplicated rows: one weighted
+    Lloyd step from a fixed centroid set must produce the duplicated
+    run's centroids (the centroid-input mode's defining property)."""
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(12, 5)), jnp.float32)
+    w = jnp.asarray(rng.integers(1, 4, size=12), jnp.float32)
+    C = X[:3] + 0.01  # every cluster non-empty, no reseed ties
+    X_dup = jnp.repeat(X, np.asarray(w, np.int64), axis=0)
+    C_w = lloyd_step(X, C, 3, weights=w)
+    C_dup = lloyd_step(X_dup, C, 3)
+    np.testing.assert_allclose(np.asarray(C_w), np.asarray(C_dup),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kmeans_pp_init_zero_weight_rows_never_seed():
+    """Zero-weight rows (empty pod-clusters) must anchor nothing: every
+    ++ seed is drawn from the positive-weight rows, even when the
+    zero-weight rows are extreme outliers that unweighted ++ seeding
+    would certainly pick."""
+    rng = np.random.default_rng(1)
+    X = np.asarray(rng.normal(size=(20, 4)), np.float32)
+    X[10:] += 1000.0  # far outliers
+    w = jnp.asarray([1.0] * 10 + [0.0] * 10)
+    for s in range(5):
+        C0 = np.asarray(kmeans_pp_init(jax.random.PRNGKey(s),
+                                       jnp.asarray(X), 4, weights=w))
+        for row in C0:
+            dists = np.abs(X[:10] - row[None, :]).sum(axis=1)
+            assert dists.min() < 1e-6, (s, row)
+
+
+# ------------------------------------------------------------ engine path
+
+
+def test_hier_pods1_bitwise_equals_flat(dr_model, dr_clients):
+    """One pod = the whole swarm: the degenerate two-tier program IS
+    the flat coordinator, bit for bit (params, metrics, key stream)."""
+    rounds = 2
+    state, data, cfg = _pieces(dr_model, dr_clients)
+    s_flat, m_flat = jit_run_rounds(state, data, cfg, rounds)
+    state, data, cfg = _pieces(dr_model, dr_clients)
+    s_p1, m_p1 = jit_run_rounds(state, data, cfg, rounds,
+                                hier=hier_params(N_CLIENTS, 1))
+    assert _tree_equal(s_flat.params, s_p1.params)
+    np.testing.assert_array_equal(np.asarray(m_flat.mean_val_acc),
+                                  np.asarray(m_p1.mean_val_acc))
+    np.testing.assert_array_equal(np.asarray(s_flat.key),
+                                  np.asarray(s_p1.key))
+
+
+def test_hier_fit_is_one_program_and_learns(dr_model, dr_clients):
+    """A multi-pod hier fit is ONE jit_run_rounds executable (never one
+    per round), re-running the same HierParams value hits the cache,
+    and the trajectory stays near the flat oracle at small N (same
+    protocol, different coordinator granularity — statistical, not
+    bitwise)."""
+    rounds, hp = 3, hier_params(N_CLIENTS, 4, k_local=2)
+    n0 = jit_run_rounds._cache_size()
+    state, data, cfg = _pieces(dr_model, dr_clients, local_steps=4)
+    _, m_hier = jit_run_rounds(state, data, cfg, rounds, hier=hp)
+    assert jit_run_rounds._cache_size() == n0 + 1
+    state, data, cfg = _pieces(dr_model, dr_clients, local_steps=4, key=1)
+    _, _ = jit_run_rounds(state, data, cfg, rounds,
+                          hier=hier_params(N_CLIENTS, 4, k_local=2))
+    assert jit_run_rounds._cache_size() == n0 + 1  # equal static value
+
+    state, data, cfg = _pieces(dr_model, dr_clients, local_steps=4)
+    _, m_flat = jit_run_rounds(state, data, cfg, rounds)
+    hier_acc = float(np.asarray(m_hier.mean_val_acc)[-1])
+    flat_acc = float(np.asarray(m_flat.mean_val_acc)[-1])
+    assert 0.0 <= hier_acc <= 1.0
+    assert abs(hier_acc - flat_acc) < 0.25, (hier_acc, flat_acc)
+
+
+def test_hier_churn_dropout0_bitwise_and_composition(dr_model, dr_clients):
+    """Churn composes with the two-tier coordinator: dropout=0 churn is
+    BITWISE the churn-free hier fit (masks are float identities, keys
+    consumed unconditionally), and dropout>0 still runs/learns — the
+    present mask feeds the pod k-means as its member mask."""
+    rounds, hp = 2, hier_params(N_CLIENTS, 4, k_local=2)
+    state, data, cfg = _pieces(dr_model, dr_clients)
+    s_ref, m_ref = jit_run_rounds(state, data, cfg, rounds, hier=hp)
+    state, data, cfg = _pieces(dr_model, dr_clients)
+    s_0, m_0 = jit_run_rounds(state, data, cfg, rounds,
+                              churn=churn_params(dropout=0.0), hier=hp)
+    assert _tree_equal(s_ref.params, s_0.params)
+    np.testing.assert_array_equal(np.asarray(m_ref.mean_val_acc),
+                                  np.asarray(m_0.mean_val_acc))
+
+    state, data, cfg = _pieces(dr_model, dr_clients)
+    _, m_d = jit_run_rounds(state, data, cfg, rounds,
+                            churn=churn_params(dropout=0.4,
+                                               stale_decay=0.5), hier=hp)
+    present = np.asarray(m_d.present)
+    assert present.shape == (rounds, N_CLIENTS)
+    assert 0 < present.mean() < 1
+    assert np.all(np.isfinite(np.asarray(m_d.mean_val_acc)))
+
+
+def test_hier_validation_errors(dr_model, dr_clients):
+    """The seams refuse loudly: hier + method axis, non-bso
+    aggregation, bad pod partitions and oversize k_local all raise
+    with actionable messages."""
+    state, data, cfg = _pieces(dr_model, dr_clients)
+    with pytest.raises(ValueError, match="plain path only"):
+        jit_run_rounds(state, data, cfg, 1,
+                       method=method_params("fedavg", N_CLIENTS),
+                       hier=hier_params(N_CLIENTS, 4))
+    state, data, cfg = _pieces(dr_model, dr_clients, local_steps=2)
+    import dataclasses
+    cfg_fed = dataclasses.replace(cfg, aggregation="fedavg")
+    with pytest.raises(ValueError, match="aggregation='bso'"):
+        jit_run_rounds(state, data, cfg_fed, 1,
+                       hier=hier_params(N_CLIENTS, 4))
+    with pytest.raises(ValueError, match="partition"):
+        hier_params(N_CLIENTS, 0, pods=((0, 1), (1, 2)))
+    with pytest.raises(ValueError, match="smallest pod"):
+        hier_params(N_CLIENTS, 7, k_local=3)  # smallest pod = 2
+    state, data, cfg = _pieces(dr_model, dr_clients)
+    with pytest.raises(ValueError, match="swarm has"):
+        jit_run_rounds(state, data, cfg, 1,
+                       hier=hier_params(N_CLIENTS - 2, 4))
+
+
+# ------------------------------------------------------------- fleet path
+
+
+N_FLEET = 8
+FLEET_TABLE = np.maximum(TABLE_I // 16,
+                         (TABLE_I > 0).astype(np.int64) * 2)[:, :N_FLEET]
+
+
+@pytest.fixture(scope="module")
+def fleet_clients():
+    return make_dr_swarm_data(image_size=16, seed=0, table=FLEET_TABLE)
+
+
+def _opt():
+    return make_optimizer(OptimizerConfig(name="adam", lr=2e-3))
+
+
+def test_fleet_hier_driver_one_program_o_pods_upload(dr_model,
+                                                     fleet_clients):
+    """The hier driver: ONE compiled round step, only O(pods * k_local)
+    summary rows pulled per round (never the (N, F) stat matrix), the
+    comm ledger's measured-vs-flat reduction, and the coordinator loop
+    actually closing (round r+1 applies round r's pod-cluster map)."""
+    mesh = make_fleet_mesh(N_FLEET)
+    kl = 2
+    S = mesh.shape["pod"] * kl
+    res = run_fleet(dr_model, _opt(), mesh, fleet_clients, rounds=3,
+                    local_steps=2, batch_size=8, seed=0,
+                    n_clusters=min(3, S), hier_k_local=kl)
+    assert res.n_compiles == 1
+    assert len(res.history) == 3
+    assert res.meta["hier"] == {"k_local": kl,
+                                "n_pods": mesh.shape["pod"],
+                                "summary_rows": S}
+    for log in res.history:
+        assert log.stats.shape[0] == S            # summaries, not clients
+        assert log.val_acc.shape == (S,)
+        assert log.assignments.shape == (S,)      # the pod-cluster map g
+        assert 0.0 <= log.mean_val_acc <= 1.0
+        assert np.isfinite(log.train_loss)
+    # loop closure: the g decided from round r's summaries is the g
+    # operand of round r+1 (round 0 rides the singleton fallback)
+    np.testing.assert_array_equal(res.history[1].applied_clusters,
+                                  res.history[0].assignments)
+    np.testing.assert_array_equal(res.history[2].applied_clusters,
+                                  res.history[1].assignments)
+    # the ledger: O(pods) summaries beat the flat O(clients) upload
+    assert res.comm["summary_rows"] == S
+    assert res.comm["summary_upload_bytes"] \
+        < res.comm["flat_upload_bytes"]
+    # determinism: replaying the global tier from a round's pulled
+    # summaries reproduces its pod-cluster map bit-for-bit
+    for r, log in enumerate(res.history):
+        assert log.counts.shape == (S,) and log.valsums.shape == (S,)
+        np.testing.assert_allclose(log.counts.sum(), N_FLEET, rtol=1e-6)
+        g2, c2, _ = host_hier_coordinator(
+            log.stats, log.counts, log.valsums, k=min(3, S), p1=0.9,
+            p2=0.8, kmeans_iters=20, seed=0, round_idx=r)
+        np.testing.assert_array_equal(g2, log.assignments)
+        np.testing.assert_array_equal(c2, log.centers)
+
+
+def test_fleet_hier_with_faults_quorum(dr_model, fleet_clients):
+    """FleetFaults composes with the hier driver: still ONE program,
+    quorum misses re-apply the previous pod-cluster map, and the
+    summary counts reflect the in-program report mask (a straggler
+    trains but never reaches the pod k-means)."""
+    mesh = make_fleet_mesh(N_FLEET)
+    kl = 2
+    S = mesh.shape["pod"] * kl
+    faults = FleetFaults(drop_rate=0.3, straggler_rate=0.2,
+                         stale_decay=0.5, quorum=4)
+    res = run_fleet(dr_model, _opt(), mesh, fleet_clients, rounds=4,
+                    local_steps=2, batch_size=8, seed=0,
+                    n_clusters=min(3, S), faults=faults, hier_k_local=kl)
+    assert res.n_compiles == 1
+    prev_g = np.zeros(S, np.int32)
+    for log in res.history:
+        assert log.present is not None and log.reported is not None
+        if not log.coordinated:
+            np.testing.assert_array_equal(log.assignments, prev_g)
+            assert "quorum miss" in log.events[0]
+        prev_g = log.assignments
+        assert 0.0 <= log.mean_val_acc <= 1.0
+
+
+def test_fleet_hier_validations(dr_model, fleet_clients):
+    mesh = make_fleet_mesh(N_FLEET)
+    with pytest.raises(ValueError, match="exclusive"):
+        run_fleet(dr_model, _opt(), mesh, fleet_clients, rounds=1,
+                  hier_k_local=2, eval_buckets=2)
+    S = mesh.shape["pod"] * 1
+    with pytest.raises(ValueError, match="raise hier_k_local"):
+        run_fleet(dr_model, _opt(), mesh, fleet_clients, rounds=1,
+                  hier_k_local=1, n_clusters=S + 1)
+
+
+def test_fleet_hier_gspmd_matches_shard_map_trivial_mesh(dr_model,
+                                                         fleet_clients):
+    """The two hier partitioning surfaces run the same math: on the
+    trivial mesh (where GSPMD can serve the vmapped conv) one round
+    with identical inputs produces matching summaries and params
+    (allclose — different collective lowerings reorder reductions)."""
+    mesh = make_fleet_mesh(N_FLEET)
+    if mesh.shape["pod"] != 1:
+        pytest.skip("trivial-mesh parity check (GSPMD cannot partition "
+                    "the vmapped conv over pods)")
+    opt = _opt()
+    kl, S = 2, 2
+    outs = []
+    for spmd in ("shard_map", "auto"):
+        prog = fleet_setup(dr_model, opt, mesh, k=N_FLEET,
+                           n_local_steps=2, spmd=spmd, hier_k_local=kl)
+        in_sh = prog.in_shardings
+        with mesh, use_sharding(mesh, prog.rules):
+            keys = jax.random.split(jax.random.PRNGKey(0), N_FLEET)
+            sparams = jax.device_put(jax.vmap(dr_model.init)(keys),
+                                     in_sh[0])
+            sopt = jax.device_put(jax.vmap(opt.init)(sparams), in_sh[1])
+            from repro.core.engine import stack_eval_split
+            from repro.launch.fleet_driver import _sample_round_batch
+            batch = jax.device_put(
+                _sample_round_batch(dr_model.cfg, fleet_clients, 16,
+                                    seed=0, round_idx=0), in_sh[2])
+            val = jax.device_put(
+                stack_eval_split(dr_model.cfg, fleet_clients, "val"),
+                in_sh[3])
+            args = (sparams, sopt, batch, val,
+                    jax.device_put(jnp.float32(2e-3), in_sh[4]),
+                    jax.device_put(jnp.zeros(S, jnp.int32), in_sh[5]),
+                    jax.device_put(jnp.asarray(False), in_sh[6]),
+                    jax.device_put(jnp.arange(N_FLEET, dtype=jnp.int32),
+                                   in_sh[7]),
+                    jax.device_put(jnp.zeros(N_FLEET, jnp.int32),
+                                   in_sh[8]),
+                    jax.device_put(jax.random.PRNGKey(9), in_sh[9]),
+                    jax.device_put(jnp.ones(N_FLEET, jnp.float32),
+                                   in_sh[10]))
+            p2, _, out = prog.jit_fn(*args)
+            outs.append((p2, out))
+    (pa, oa), (pb, ob) = outs
+    for x, y in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(oa.centroids),
+                               np.asarray(ob.centroids), rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(oa.a_local),
+                                  np.asarray(ob.a_local))
+    np.testing.assert_allclose(np.asarray(oa.counts),
+                               np.asarray(ob.counts), rtol=1e-6)

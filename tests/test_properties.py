@@ -7,7 +7,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.aggregation import cluster_fedavg, fedavg
+from repro.core.aggregation import (cluster_fedavg, cluster_fedavg_masked,
+                                    cluster_fedavg_psum_masked, fedavg)
 from repro.core.bso import brain_storm, brain_storm_jax
 from repro.core.kmeans import kmeans
 from repro.kernels import ops, ref
@@ -56,6 +57,156 @@ def test_cluster_fedavg_idempotent(n, seed):
     twice = cluster_fedavg(once, assignments, weights, k=2)
     np.testing.assert_allclose(np.asarray(twice["w"]), np.asarray(once["w"]),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------- masked aggregation (churn Eq. 2)
+
+def _masked_case(n, k, seed, drop_frac=0.0, zero_cluster=False):
+    """Random churn-Eq.2 inputs: stacked params, assignments, base
+    |D_h| weights, and a presence mask (optionally forcing cluster 0's
+    effective weight to zero)."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(n, 4)).astype(np.float32)
+    a = rng.integers(0, k, size=n).astype(np.int32)
+    base = rng.uniform(0.5, 5.0, size=n).astype(np.float32)
+    present = rng.uniform(size=n) >= drop_frac
+    if zero_cluster:
+        present = present | True          # start all-present…
+        present &= a != 0                 # …then hard-drop cluster 0
+    if not present.any():
+        present[0] = True
+    weights = base * present.astype(np.float32)
+    return W, a, base, weights, present
+
+
+def _masked_oracle(W, a, weights, present, k):
+    """Numpy reference for cluster_fedavg_masked: weighted per-cluster
+    mean for present members of positively-weighted clusters, own
+    params otherwise."""
+    out = W.copy()
+    tot = np.zeros(k, np.float64)
+    sums = np.zeros((k,) + W.shape[1:], np.float64)
+    for i in range(len(W)):
+        tot[a[i]] += weights[i]
+        sums[a[i]] += weights[i] * W[i]
+    for i in range(len(W)):
+        if present[i] and tot[a[i]] > 0.0:
+            out[i] = (sums[a[i]] / tot[a[i]]).astype(np.float32)
+    return out
+
+
+@given(st.integers(3, 12), st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.8))
+def test_cluster_fedavg_masked_matches_numpy_oracle(n, k, seed, drop):
+    W, a, _, weights, present = _masked_case(n, k, seed, drop_frac=drop)
+    out = cluster_fedavg_masked({"w": jnp.asarray(W)}, jnp.asarray(a),
+                                jnp.asarray(weights), jnp.asarray(present),
+                                k=k)["w"]
+    np.testing.assert_allclose(np.asarray(out),
+                               _masked_oracle(W, a, weights, present, k),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(3, 12), st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.8))
+def test_cluster_fedavg_masked_permutation_invariant(n, k, seed, drop):
+    """Relabeling clients (permuting all per-client arrays together)
+    permutes the output identically — no client is privileged."""
+    W, a, _, weights, present = _masked_case(n, k, seed, drop_frac=drop)
+    out = np.asarray(cluster_fedavg_masked(
+        {"w": jnp.asarray(W)}, jnp.asarray(a), jnp.asarray(weights),
+        jnp.asarray(present), k=k)["w"])
+    perm = np.random.default_rng(seed ^ 0x5EED).permutation(n)
+    out_p = np.asarray(cluster_fedavg_masked(
+        {"w": jnp.asarray(W[perm])}, jnp.asarray(a[perm]),
+        jnp.asarray(weights[perm]), jnp.asarray(present[perm]), k=k)["w"])
+    np.testing.assert_allclose(out_p, out[perm], rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(3, 12), st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+def test_cluster_fedavg_masked_zero_weight_cluster_keeps_own(n, k, seed):
+    """A cluster whose every member is hard-dropped aggregates nothing:
+    its members keep their own params BITWISE (the zero-denominator
+    guard), and no NaN ever surfaces."""
+    W, a, _, weights, present = _masked_case(n, k, seed, zero_cluster=True)
+    out = np.asarray(cluster_fedavg_masked(
+        {"w": jnp.asarray(W)}, jnp.asarray(a), jnp.asarray(weights),
+        jnp.asarray(present), k=k)["w"])
+    assert not np.isnan(out).any()
+    for i in range(n):
+        if a[i] == 0 or not present[i]:
+            assert np.array_equal(out[i], W[i])
+
+
+@given(st.integers(3, 12), st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.8))
+def test_cluster_fedavg_masked_stale_decay_zero_is_hard_mask(n, k, seed,
+                                                            drop):
+    """stale_decay = 0 semantics: base * 0.0**staleness (staleness > 0
+    iff absent; numpy 0**0 == 1) is EXACTLY the hard mask
+    base * present — the two churn options coincide at λ = 0."""
+    W, a, base, _, present = _masked_case(n, k, seed, drop_frac=drop)
+    staleness = (~present).astype(np.float32) * \
+        np.random.default_rng(seed ^ 0xDECA).integers(
+            1, 5, size=n).astype(np.float32)
+    w_decay = base * np.float_power(0.0, staleness).astype(np.float32)
+    w_hard = base * present.astype(np.float32)
+    np.testing.assert_array_equal(w_decay, w_hard)
+    out_d = cluster_fedavg_masked({"w": jnp.asarray(W)}, jnp.asarray(a),
+                                  jnp.asarray(w_decay),
+                                  jnp.asarray(present), k=k)["w"]
+    out_h = cluster_fedavg_masked({"w": jnp.asarray(W)}, jnp.asarray(a),
+                                  jnp.asarray(w_hard),
+                                  jnp.asarray(present), k=k)["w"]
+    assert np.array_equal(np.asarray(out_d), np.asarray(out_h))
+
+
+@given(st.integers(3, 12), st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.8))
+def test_cluster_fedavg_masked_mean_is_bounded_by_members(n, k, seed, drop):
+    """Every receiving client's aggregate lies inside the [min, max]
+    envelope of its cluster's positively-weighted members (weighted
+    mean is a convex combination)."""
+    W, a, _, weights, present = _masked_case(n, k, seed, drop_frac=drop)
+    out = np.asarray(cluster_fedavg_masked(
+        {"w": jnp.asarray(W)}, jnp.asarray(a), jnp.asarray(weights),
+        jnp.asarray(present), k=k)["w"])
+    tot = np.bincount(a, weights=weights, minlength=k)
+    for i in range(n):
+        if not (present[i] and tot[a[i]] > 0.0):
+            continue
+        members = W[(a == a[i]) & (weights > 0.0)]
+        assert (out[i] >= members.min(axis=0) - 1e-4).all()
+        assert (out[i] <= members.max(axis=0) + 1e-4).all()
+
+
+@given(st.integers(3, 10), st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.8))
+@settings(max_examples=10, deadline=None)
+def test_cluster_fedavg_psum_masked_matches_segment_sum(n, k, seed, drop):
+    """Fleet-regime masked psum Eq. 2 == sim-regime masked segment-sum
+    on a 1-device 'pod' mesh (whole swarm in one shard; the psum is the
+    identity reduction, so any divergence is in the shared math)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    W, a, _, weights, present = _masked_case(n, k, seed, drop_frac=drop)
+    expect = cluster_fedavg_masked({"w": jnp.asarray(W)}, jnp.asarray(a),
+                                   jnp.asarray(weights),
+                                   jnp.asarray(present), k=k)["w"]
+    mesh = jax.make_mesh((1,), ("pod",))
+
+    def body(p, c, w, m):
+        inner = jax.tree.map(lambda x: x[0], p)
+        out = cluster_fedavg_psum_masked(inner, c[0], w[0], m[0], k, "pod")
+        return jax.tree.map(lambda x: x[None], out)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("pod"), P("pod"), P("pod"), P("pod")),
+                   out_specs=P("pod"))
+    got = fn({"w": jnp.asarray(W)[None]}, jnp.asarray(a)[None],
+             jnp.asarray(weights)[None], jnp.asarray(present)[None])["w"][0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
 
 
 # ------------------------------------------------------------------ kmeans

@@ -29,7 +29,12 @@ def _trainer(model, clients, aggregation, rounds=2, local_steps=4, seed=0):
                         aggregation=aggregation)
 
 
-def test_bso_swarm_round_runs_and_improves(dr_clients):
+@pytest.mark.parametrize("fit_keys", [
+    (1, 11, 21),
+    pytest.param((31, 41, 51), marks=pytest.mark.slow),
+    pytest.param((61, 71, 81), marks=pytest.mark.slow),
+])
+def test_bso_swarm_round_runs_and_improves(dr_clients, fit_keys):
     """The protocol runs end-to-end and learns. With ~16x-reduced data
     the per-clinic test sets are 2-3 samples, so accuracy is quantised
     and a single fit key is roulette (one sample flip moves Eq. 3 by
@@ -37,11 +42,13 @@ def test_bso_swarm_round_runs_and_improves(dr_clients):
     rounds, (b) final mean accuracy clears the 5-class random floor
     *averaged over fit keys* (same reformulation as
     test_collaboration_beats_isolation), and (c) the per-round
-    protocol artifacts are well-formed. The full-scale Table II
-    comparison lives in benchmarks/table2_methods."""
+    protocol artifacts are well-formed. Tier-1 averages the pinned key
+    triple; the slow triples (nightly ``--runslow``) replicate the
+    statistic on fresh keys. The full-scale Table II comparison lives
+    in benchmarks/table2_methods."""
     model = build_model(get_config("squeezenet-dr"))
     accs = []
-    for i, fit_key in enumerate((1, 11, 21)):
+    for i, fit_key in enumerate(fit_keys):
         tr = _trainer(model, dr_clients, "bso", rounds=4, local_steps=10)
         tr.fit(jax.random.PRNGKey(fit_key))
         accs.append(tr.mean_accuracy("test"))
@@ -59,7 +66,12 @@ def test_bso_swarm_round_runs_and_improves(dr_clients):
     assert float(np.mean(accs)) > 0.25, accs   # above 1/5 random
 
 
-def test_collaboration_beats_isolation(dr_clients):
+@pytest.mark.parametrize("fit_keys", [
+    (3, 13, 23),
+    pytest.param((33, 43, 53), marks=pytest.mark.slow),
+    pytest.param((63, 73, 83), marks=pytest.mark.slow),
+])
+def test_collaboration_beats_isolation(dr_clients, fit_keys):
     """BSO-SL must not collapse relative to isolated local training.
 
     At this reduced scale the per-client Eq. 3 protocol rewards local
@@ -67,12 +79,13 @@ def test_collaboration_beats_isolation(dr_clients):
     single-key margins are key-roulette: average over several fit keys
     and allow the documented local-advantage gap — the guard is
     'aggregation still trains' (floor) and 'no catastrophic collapse'
-    (bounded gap), not 'bso wins'."""
+    (bounded gap), not 'bso wins'. Tier-1 averages the pinned triple;
+    the slow triples (nightly ``--runslow``) replicate the statistic."""
     model = build_model(get_config("squeezenet-dr"))
     runs = {}
     for agg in ("none", "bso"):
         accs = []
-        for fit_key in (3, 13, 23):
+        for fit_key in fit_keys:
             tr = _trainer(model, dr_clients, agg, rounds=4, local_steps=10,
                           seed=2)
             tr.fit(jax.random.PRNGKey(fit_key))
